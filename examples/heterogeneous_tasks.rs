@@ -1,0 +1,93 @@
+//! Heterogeneous workload (experiment 3 in miniature, real mode): function
+//! tasks (PJRT docking) and executable tasks (real subprocesses) run
+//! concurrently through one coordinator, in isolation from each other.
+//!
+//!     cargo run --release --example heterogeneous_tasks
+//!
+//! The paper's claim (§IV-C): "the consistency of behavior for function
+//! and executable tasks indicates that RAPTOR can concurrently execute
+//! both types of task in isolation, without affecting overall
+//! performance."  This driver measures per-class completion rates and
+//! asserts both classes complete fully.
+
+use raptor::coordinator::{Coordinator, EngineKind, RaptorConfig};
+use raptor::task::{DockCall, ExecCall, TaskDesc};
+
+fn main() -> anyhow::Result<()> {
+    let use_pjrt = raptor::runtime::artifacts_built();
+    let engine = if use_pjrt {
+        EngineKind::PjrtCpu
+    } else {
+        println!("artifacts not built; falling back to synthetic docking");
+        EngineKind::Synthetic
+    };
+
+    let n_fn = 600u64;
+    let n_ex = 600u64;
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 2,
+        bulk_size: 32,
+        engine,
+        exec_time_scale: 1.0,
+        keep_results: true,
+        ..Default::default()
+    };
+    println!(
+        "heterogeneous run: {n_fn} function (docking) + {n_ex} executable (subprocess) tasks"
+    );
+
+    let mut c = Coordinator::new(cfg)?;
+    // Interleave the two classes, mirroring the paper's mixed bulks.
+    let tasks = (0..n_fn + n_ex).map(|i| {
+        if i % 2 == 0 {
+            TaskDesc::function(
+                i,
+                DockCall {
+                    library_seed: 0x7E57,
+                    protein_seed: 42,
+                    first_ligand_id: (i / 2) * 8,
+                    bundle: 8,
+                },
+            )
+        } else {
+            // A real (tiny) subprocess per executable task.
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec!["/bin/sh".into(), "-c".into(), ":".into()],
+                    sim_duration: 0.0,
+                },
+            )
+        }
+    });
+    c.submit(tasks)?;
+    let t0 = std::time::Instant::now();
+    c.start()?;
+    let report = c.join()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let (mut fn_done, mut ex_done) = (0u64, 0u64);
+    for r in &report.results {
+        if r.uid % 2 == 0 {
+            fn_done += 1;
+        } else {
+            ex_done += 1;
+        }
+    }
+    println!(
+        "completed {}/{} tasks in {wall:.2}s  (fn {fn_done}, exec {ex_done})  rates: {:.0} fn/s, {:.0} exec/s",
+        report.done,
+        n_fn + n_ex,
+        fn_done as f64 / wall,
+        ex_done as f64 / wall
+    );
+    anyhow::ensure!(report.failed == 0, "tasks failed");
+    anyhow::ensure!(fn_done == n_fn && ex_done == n_ex, "class lost tasks");
+    println!(
+        "utilization avg {:.0}% / steady {:.0}% — both classes completed in isolation",
+        report.utilization.avg * 100.0,
+        report.utilization.steady * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! End-to-end driver: generate docking training data at throughput, then
+//! train the docking-score surrogate MLP on it — the paper's motivating
+//! downstream pipeline ("to generate training data for docking surrogate
+//! models [7], [8] that are up to 3–4 orders of magnitude faster than
+//! traditional docking programs").
+//!
+//!     make artifacts && cargo run --release --example surrogate_training
+//!
+//! Every layer composes here, with python nowhere on the path:
+//!   1. RAPTOR coordinator + PJRT workers dock a ligand set (L3→runtime);
+//!   2. ligand descriptors are pooled from the same deterministic features;
+//!   3. the AOT-compiled SGD step (L2 fwd/bwd) trains the surrogate;
+//!   4. the surrogate's ranking quality is evaluated against held-out
+//!      docking scores and the speedup is measured.
+
+use raptor::coordinator::{Coordinator, EngineKind, RaptorConfig};
+use raptor::runtime::surrogate::{
+    affinity_descriptor, SurrogateParams, SurrogateRuntime, SURR_BATCH, SURR_IN,
+};
+use raptor::workload::{calls_to_tasks, features, LigandLibrary};
+
+const PROTEIN_SEED: u64 = 42;
+
+fn main() -> anyhow::Result<()> {
+    anyhow::ensure!(
+        raptor::runtime::artifacts_built(),
+        "artifacts not built — run `make artifacts` first"
+    );
+
+    // ---- 1. Dock a library slice with real PJRT workers ----
+    let lib = LigandLibrary::tiny(8_192);
+    let bundle = 8u32;
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 2,
+        bulk_size: 32,
+        engine: EngineKind::PjrtCpu,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg)?;
+    c.submit(calls_to_tasks(lib.strided_calls(PROTEIN_SEED, bundle, 0, 1), 0))?;
+    let t_dock = std::time::Instant::now();
+    c.start()?;
+    let report = c.join()?;
+    let dock_wall = t_dock.elapsed().as_secs_f64();
+    anyhow::ensure!(report.failed == 0, "docking failed");
+    let per_dock_s = dock_wall / (report.done as f64 * bundle as f64);
+    println!(
+        "docked {} ligands in {:.2}s ({:.1} us/dock) — training data ready",
+        report.done as u64 * bundle as u64,
+        dock_wall,
+        per_dock_s * 1e6
+    );
+
+    // ---- 2. Build (fingerprint, score) pairs ----
+    // The receptor-aware affinity fingerprint stands in for the
+    // structure-aware descriptors of Refs. [7], [8].
+    let receptor = features::receptor_features(PROTEIN_SEED, features::GRID, features::FEAT);
+    let mut xs: Vec<f32> = Vec::new();
+    let mut ys: Vec<f32> = Vec::new();
+    for r in &report.results {
+        let first = r.uid * bundle as u64;
+        for (i, &score) in r.scores.iter().enumerate() {
+            let lig = features::ligand_features(
+                lib.seed,
+                first + i as u64,
+                features::ATOMS,
+                features::FEAT,
+            );
+            let desc = affinity_descriptor(
+                &lig,
+                features::ATOMS,
+                features::FEAT,
+                &receptor,
+                features::GRID,
+                features::N_POSE,
+            );
+            debug_assert_eq!(desc.len(), SURR_IN);
+            // Map fingerprints through the pair-energy curve (the kind of
+            // domain transform Ref. [8] bakes into its featurizers).
+            xs.extend(desc.iter().map(|&m2| m2 * m2 - 2.0 * m2));
+            ys.push(score);
+        }
+    }
+    // Standardize inputs (tanh MLP wants ~unit-scale features).
+    let xn = xs.len() as f32;
+    let xmean = xs.iter().sum::<f32>() / xn;
+    let xstd = (xs.iter().map(|x| (x - xmean) * (x - xmean)).sum::<f32>() / xn)
+        .sqrt()
+        .max(1e-6);
+    for x in &mut xs {
+        *x = (*x - xmean) / xstd;
+    }
+    // Normalize scores (the MLP trains on zero-mean unit-var targets).
+    let n = ys.len();
+    let mean = ys.iter().sum::<f32>() / n as f32;
+    let var = ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f32>() / n as f32;
+    let std = var.sqrt().max(1e-6);
+    for y in &mut ys {
+        *y = (*y - mean) / std;
+    }
+    let n_train = n - SURR_BATCH; // hold one batch out
+    println!("dataset: {n} ligands ({n_train} train, {SURR_BATCH} held out)");
+
+    // ---- 3. Train via the AOT SGD-step artifact ----
+    let mut rt = SurrogateRuntime::new(SurrogateParams::init(1))?;
+    let epochs = 120;
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    let t_train = std::time::Instant::now();
+    for epoch in 0..epochs {
+        let mut epoch_loss = 0.0f32;
+        let mut batches = 0;
+        for b in (0..n_train).step_by(SURR_BATCH) {
+            if b + SURR_BATCH > n_train {
+                break;
+            }
+            let x = &xs[b * SURR_IN..(b + SURR_BATCH) * SURR_IN];
+            let y = &ys[b..b + SURR_BATCH];
+            epoch_loss += rt.train_step(x, y)?;
+            batches += 1;
+        }
+        epoch_loss /= batches as f32;
+        if epoch == 0 {
+            first_loss = epoch_loss;
+        }
+        last_loss = epoch_loss;
+        if epoch % 10 == 0 || epoch == epochs - 1 {
+            println!("  epoch {epoch:>3}: loss {epoch_loss:.4}");
+        }
+    }
+    let train_wall = t_train.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        last_loss < first_loss * 0.9,
+        "surrogate failed to learn: {first_loss} -> {last_loss}"
+    );
+
+    // ---- 4. Evaluate: ranking quality + speedup ----
+    let xt = &xs[n_train * SURR_IN..n * SURR_IN];
+    let yt = &ys[n_train..n];
+    let t_pred = std::time::Instant::now();
+    let pred = rt.predict(xt)?;
+    let per_pred_s = t_pred.elapsed().as_secs_f64() / SURR_BATCH as f64;
+    // Spearman-ish check: rank correlation sign via concordant pairs.
+    let mut concordant = 0u32;
+    let mut total = 0u32;
+    for i in 0..SURR_BATCH {
+        for j in i + 1..SURR_BATCH {
+            total += 1;
+            if (pred[i] - pred[j]) * (yt[i] - yt[j]) > 0.0 {
+                concordant += 1;
+            }
+        }
+    }
+    let tau = concordant as f64 / total as f64;
+    println!(
+        "held-out concordance {:.0}% ({} of {} pairs ranked correctly)",
+        tau * 100.0,
+        concordant,
+        total
+    );
+    println!(
+        "surrogate inference {:.2} us/ligand vs docking {:.1} us/ligand -> {:.0}x faster (train {:.1}s)",
+        per_pred_s * 1e6,
+        per_dock_s * 1e6,
+        per_dock_s / per_pred_s,
+        train_wall
+    );
+    anyhow::ensure!(tau > 0.55, "surrogate ranks no better than chance");
+    println!("surrogate training pipeline complete — loss {first_loss:.4} -> {last_loss:.4}");
+    Ok(())
+}

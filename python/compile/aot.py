@@ -1,0 +1,183 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla_extension 0.5.1 bundled with the rust ``xla`` crate rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Also emits ``artifacts/testvec_*.json``: concrete input/output vectors from
+the reference oracle, which the rust runtime tests replay through PJRT to
+pin the cross-language numerics.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import featgen, model
+from compile.kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict[str, str]:
+    """Lower every entry point; returns {name: artifact path}."""
+    os.makedirs(out_dir, exist_ok=True)
+    args = model.example_args()
+    paths = {}
+    for name, fn in model.ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*args[name])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        paths[name] = path
+        print(f"wrote {path} ({len(text)} chars)")
+    return paths
+
+
+def write_test_vectors(out_dir: str) -> None:
+    """Concrete input/output pairs for the rust runtime's numeric tests.
+
+    Inputs are generated with the SAME SplitMix64 feature generator the
+    rust workload module implements, so these vectors pin down both the
+    generator parity and the PJRT execution numerics.
+    """
+    lib_seed = 0x5EED_0001
+    prot_seed = 42
+
+    # dock_cpu vector
+    lig = featgen.ligand_batch(lib_seed, 1000, model.CPU_BUNDLE, model.ATOMS, model.FEAT)
+    rec = featgen.receptor_grid(prot_seed, model.GRID, model.FEAT)
+    score = np.asarray(
+        ref.dock_score_poses_ref(jax.numpy.asarray(lig), jax.numpy.asarray(rec), model.N_POSE)
+    )
+    vec = {
+        "library_seed": lib_seed,
+        "protein_seed": prot_seed,
+        "first_ligand_id": 1000,
+        "bundle": model.CPU_BUNDLE,
+        "atoms": model.ATOMS,
+        "feat": model.FEAT,
+        "grid": model.GRID,
+        "n_pose": model.N_POSE,
+        "lig": lig.reshape(-1).tolist(),
+        "rec": rec.reshape(-1).tolist(),
+        "score": score.tolist(),
+    }
+    path = os.path.join(out_dir, "testvec_dock_cpu.json")
+    with open(path, "w") as f:
+        json.dump(vec, f)
+    print(f"wrote {path}")
+
+    # dock_gpu vector (16-ligand bundle)
+    lig_g = featgen.ligand_batch(lib_seed, 2000, model.GPU_BUNDLE, model.ATOMS, model.FEAT)
+    score_g = np.asarray(
+        ref.dock_score_poses_ref(
+            jax.numpy.asarray(lig_g), jax.numpy.asarray(rec), model.N_POSE
+        )
+    )
+    vec_g = dict(vec)
+    vec_g.update(
+        first_ligand_id=2000,
+        bundle=model.GPU_BUNDLE,
+        lig=lig_g.reshape(-1).tolist(),
+        score=score_g.tolist(),
+    )
+    path = os.path.join(out_dir, "testvec_dock_gpu.json")
+    with open(path, "w") as f:
+        json.dump(vec_g, f)
+    print(f"wrote {path}")
+
+    # fingerprint vector (ties the rust scalar implementation, the pallas
+    # kernel and the AOT artifact together)
+    fp = np.asarray(model.fingerprint(jax.numpy.asarray(lig), jax.numpy.asarray(rec))[0])
+    path = os.path.join(out_dir, "testvec_fingerprint.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "library_seed": lib_seed,
+                "protein_seed": prot_seed,
+                "first_ligand_id": 1000,
+                "bundle": model.CPU_BUNDLE,
+                "n_pose": model.N_POSE,
+                "fingerprint": fp.reshape(-1).tolist(),
+            },
+            f,
+        )
+    print(f"wrote {path}")
+
+    # surrogate vector: params after one train step + inference outputs
+    params = model.surrogate_init(0)
+    x = featgen.u64_to_unit_f32(
+        featgen.splitmix64_stream(7, model.SURR_BATCH * model.SURR_IN)
+    ).reshape(model.SURR_BATCH, model.SURR_IN).astype(np.float32)
+    y = featgen.u64_to_unit_f32(
+        featgen.splitmix64_stream(11, model.SURR_BATCH)
+    ).astype(np.float32)
+    loss, *new_params = model.surrogate_train_step(*params, x, y)
+    pred = model.surrogate_infer(*new_params, x)[0]
+    path = os.path.join(out_dir, "testvec_surrogate.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "w1": np.asarray(params[0]).reshape(-1).tolist(),
+                "b1": np.asarray(params[1]).reshape(-1).tolist(),
+                "w2": np.asarray(params[2]).reshape(-1).tolist(),
+                "b2": np.asarray(params[3]).reshape(-1).tolist(),
+                "x": x.reshape(-1).tolist(),
+                "y": y.tolist(),
+                "loss": float(loss),
+                "pred_after_step": np.asarray(pred).tolist(),
+                "in_dim": model.SURR_IN,
+                "hidden": model.SURR_HIDDEN,
+                "batch": model.SURR_BATCH,
+                "lr": model.SURR_LR,
+            },
+            f,
+        )
+    print(f"wrote {path}")
+
+    # feature-generator parity vector (no jax involved)
+    path = os.path.join(out_dir, "testvec_featgen.json")
+    u = featgen.splitmix64_stream(0xDEADBEEF, 8)
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "seed": 0xDEADBEEF,
+                "u64": [int(v) for v in u],
+                "unit_f32": featgen.u64_to_unit_f32(u).tolist(),
+                "lig_0_0": featgen.ligand_features(lib_seed, 0, 4, 4).reshape(-1).tolist(),
+                "rec_0": featgen.receptor_grid(prot_seed, 4, 4).reshape(-1).tolist(),
+            },
+            f,
+        )
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    lower_all(args.out_dir)
+    write_test_vectors(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

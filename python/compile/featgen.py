@@ -1,0 +1,68 @@
+"""Deterministic synthetic ligand/receptor feature generation.
+
+The paper's workload docks ligands from real chemical libraries
+(Orderable-zinc-db-enaHLL, mcule-ultimate-200204-VJL) against protein
+targets given as PDB files.  Neither the libraries nor OpenEye are
+redistributable, so the reproduction synthesizes feature tensors
+deterministically from (library seed, ligand id) / (protein seed) with a
+SplitMix64 stream.  The SAME generator is implemented in
+``rust/src/workload/features.rs`` — cross-checked by the test vectors
+emitted from ``aot.py`` — so the rust hot path and the python oracle
+always agree bit-for-bit on inputs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+
+def splitmix64_next(state: int) -> tuple[int, int]:
+    """One step of SplitMix64. Returns (new_state, output)."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+def splitmix64_stream(seed: int, n: int) -> np.ndarray:
+    """n raw u64 outputs from a SplitMix64 stream."""
+    out = np.empty(n, dtype=np.uint64)
+    s = seed & MASK64
+    for i in range(n):
+        s, z = splitmix64_next(s)
+        out[i] = z
+    return out
+
+
+def u64_to_unit_f32(u: np.ndarray) -> np.ndarray:
+    """Map u64 -> f32 in [0, 1) using the top 24 bits (exact in f32)."""
+    return ((u >> np.uint64(40)).astype(np.float64) / float(1 << 24)).astype(
+        np.float32
+    )
+
+
+def ligand_features(library_seed: int, ligand_id: int, atoms: int, feat: int) -> np.ndarray:
+    """Feature tensor f32[atoms, feat] for one ligand, values in [-1, 1)."""
+    seed = (library_seed ^ (ligand_id * 0x9E3779B97F4A7C15 + 0xD1B54A32D192ED03)) & MASK64
+    u = splitmix64_stream(seed, atoms * feat)
+    x = u64_to_unit_f32(u) * 2.0 - 1.0
+    return x.reshape(atoms, feat)
+
+
+def receptor_grid(protein_seed: int, grid: int, feat: int) -> np.ndarray:
+    """Receptor pocket grid f32[grid, feat], values in [-1, 1)."""
+    seed = (protein_seed ^ 0xA0761D6478BD642F) & MASK64
+    u = splitmix64_stream(seed, grid * feat)
+    x = u64_to_unit_f32(u) * 2.0 - 1.0
+    return x.reshape(grid, feat)
+
+
+def ligand_batch(library_seed: int, first_id: int, batch: int, atoms: int, feat: int) -> np.ndarray:
+    """Batch of consecutive ligand feature tensors f32[batch, atoms, feat]."""
+    return np.stack(
+        [ligand_features(library_seed, first_id + i, atoms, feat) for i in range(batch)]
+    )

@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for the docking-score kernels.
+
+Everything here is the *reference semantics*: the Pallas kernels in
+``dock.py`` must match these functions to float tolerance (pytest enforces
+it), and the AOT artifacts loaded by the rust runtime are validated against
+test vectors produced from these functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Lennard-Jones-like surrogate constants (dimensionless).
+W_REPULSE = 1.0
+W_ATTRACT = 2.0
+# Affinities are normalized by F so that m ~ O(1/sqrt(F)) regardless of the
+# feature width: without this the per-atom minimum saturates at the
+# double-well bottom (-w_a^2/4w_r) for every ligand and scores lose all
+# discrimination.
+def _affinity_scale(feat_dim: int) -> float:
+    return 1.0 / float(feat_dim)
+
+
+def pair_energy(m: jnp.ndarray) -> jnp.ndarray:
+    """Map raw affinity m = <l, r> to a pair interaction energy.
+
+    e(m) = w_r * m^4 - w_a * m^2  — a soft double-well: strong alignment in
+    either direction is repulsive at large |m| and attractive at moderate
+    |m|, mimicking the shape of a 12-6 potential without divisions.
+    """
+    m2 = m * m
+    return W_REPULSE * m2 * m2 - W_ATTRACT * m2
+
+
+def dock_score_ref(lig: jnp.ndarray, rec: jnp.ndarray) -> jnp.ndarray:
+    """Reference docking score.
+
+    lig: f32[B, A, F]  — batch of ligands, A atoms, F chemical features
+    rec: f32[G, F]     — receptor pocket grid, G probe points
+
+    For each atom, the best (minimum-energy) probe point is selected; the
+    ligand score is the sum of per-atom minima.  Lower is better (stronger
+    predicted binding).
+    Returns f32[B].
+    """
+    # affinity[B, A, G], normalized to O(1)
+    m = jnp.einsum("baf,gf->bag", lig, rec) * _affinity_scale(lig.shape[-1])
+    e = pair_energy(m)
+    per_atom = jnp.min(e, axis=-1)  # [B, A]
+    return jnp.sum(per_atom, axis=-1)  # [B]
+
+
+def rotate_receptor_ref(rec: jnp.ndarray, pose: int, n_pose: int) -> jnp.ndarray:
+    """Cheap deterministic 'pose' transform of the receptor grid.
+
+    Real docking scores multiple ligand poses; the surrogate rotates pairs
+    of feature planes by a pose-dependent angle, which preserves feature
+    norms (a rigid rotation in feature space).
+    """
+    theta = 2.0 * jnp.pi * (pose + 1) / (n_pose + 1)
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    f = rec.shape[-1]
+    half = f // 2
+    a, b = rec[..., :half], rec[..., half:]
+    return jnp.concatenate([c * a - s * b, s * a + c * b], axis=-1)
+
+
+def dock_score_poses_ref(lig: jnp.ndarray, rec: jnp.ndarray, n_pose: int) -> jnp.ndarray:
+    """Score over n_pose receptor poses, keeping the best (min) per ligand."""
+    scores = []
+    for p in range(n_pose):
+        scores.append(dock_score_ref(lig, rotate_receptor_ref(rec, p, n_pose)))
+    return jnp.min(jnp.stack(scores, axis=0), axis=0)
+
+
+# --- Surrogate MLP reference -------------------------------------------------
+
+
+def surrogate_init_shapes(feat_in: int, hidden: int) -> list[tuple[int, ...]]:
+    """Shapes of the flat parameter list [w1, b1, w2, b2]."""
+    return [(feat_in, hidden), (hidden,), (hidden, 1), (1,)]
+
+
+def surrogate_forward_ref(params, x):
+    """2-layer MLP: x f32[B, D] -> predicted docking score f32[B]."""
+    w1, b1, w2, b2 = params
+    h = jnp.tanh(x @ w1 + b1)
+    return (h @ w2 + b2).squeeze(-1)
+
+
+def surrogate_loss_ref(params, x, y):
+    """MSE between surrogate prediction and docking score."""
+    pred = surrogate_forward_ref(params, x)
+    d = pred - y
+    return jnp.mean(d * d)

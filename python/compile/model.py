@@ -1,0 +1,154 @@
+"""L2: JAX compute graphs for the docking surrogate and the score-surrogate
+MLP, built on the L1 Pallas kernel.
+
+Three graphs are lowered to AOT artifacts (see ``aot.py``):
+
+* ``dock_cpu``  — OpenEye-analogue: batch of ``CPU_BUNDLE`` ligands scored
+  over ``N_POSE`` receptor poses.  One call = one function task on a
+  Frontera-like CPU worker core.
+* ``dock_gpu``  — AutoDock-GPU-analogue: ``GPU_BUNDLE`` (16) ligands bundled
+  into one call, matching the paper's §IV-D observation that AutoDock-GPU
+  bundles 16 ligands per GPU computation.
+* ``surrogate_train`` / ``surrogate_infer`` — one SGD step / batched
+  inference of the docking-score surrogate MLP (the paper's motivating
+  downstream consumer of docking data, Refs. [7], [8]).
+
+Python runs ONCE at build time; the rust coordinator executes the lowered
+HLO via PJRT on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dock import ATOMS, FEAT, GRID, dock_score_kernel
+from compile.kernels.fingerprint import fingerprint_kernel
+from compile.kernels.ref import (
+    rotate_receptor_ref,
+    surrogate_forward_ref,
+    surrogate_loss_ref,
+)
+
+# Bundle sizes: §IV — OpenEye scores per-core batches on Frontera; AutoDock-GPU
+# bundles 16 ligands into one GPU computation on Summit.
+CPU_BUNDLE = 8
+GPU_BUNDLE = 16
+N_POSE = 4  # receptor poses scored per docking call (paper: up to 20)
+
+# Surrogate MLP geometry: ligand descriptor -> hidden -> score.
+SURR_IN = ATOMS  # per-atom mean feature vector is pooled to ATOMS dims
+SURR_HIDDEN = 64
+SURR_BATCH = 32
+SURR_LR = 1e-2
+
+
+def dock_score(lig: jnp.ndarray, rec: jnp.ndarray) -> jnp.ndarray:
+    """Docking score over N_POSE receptor poses, best (min) per ligand.
+
+    lig: f32[B, A, F]; rec: f32[G, F] -> f32[B].
+    The pose rotations are applied at L2 (plain XLA ops); each pose's
+    scoring runs through the L1 Pallas kernel so the hot loop lowers into
+    the same HLO module.
+    """
+    scores = []
+    for p in range(N_POSE):
+        scores.append(dock_score_kernel(lig, rotate_receptor_ref(rec, p, N_POSE)))
+    return jnp.min(jnp.stack(scores, axis=0), axis=0)
+
+
+def dock_cpu(lig, rec):
+    """OpenEye-analogue artifact entry point (tuple-returning for AOT)."""
+    return (dock_score(lig, rec),)
+
+
+def dock_gpu(lig, rec):
+    """AutoDock-GPU-analogue artifact entry point (16-ligand bundle)."""
+    return (dock_score(lig, rec),)
+
+
+def fingerprint(lig, rec):
+    """Receptor-aware fingerprint over all N_POSE pose rotations.
+
+    lig f32[B, A, F], rec f32[G, F] -> f32[B, A].  The pose-rotated grids
+    are stacked along the probe axis at L2 so the L1 kernel reduces over
+    poses and probes in one pass.
+    """
+    stack = jnp.concatenate(
+        [rotate_receptor_ref(rec, p, N_POSE) for p in range(N_POSE)], axis=0
+    )
+    return (fingerprint_kernel(lig, stack),)
+
+
+# --- Surrogate MLP (fwd/bwd) -------------------------------------------------
+
+
+def surrogate_init(seed: int = 0):
+    """Initialize [w1, b1, w2, b2] with a fixed PRNG key (build-time only)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (SURR_IN, SURR_HIDDEN), jnp.float32) * (
+        1.0 / jnp.sqrt(SURR_IN)
+    )
+    b1 = jnp.zeros((SURR_HIDDEN,), jnp.float32)
+    w2 = jax.random.normal(k2, (SURR_HIDDEN, 1), jnp.float32) * (
+        1.0 / jnp.sqrt(SURR_HIDDEN)
+    )
+    b2 = jnp.zeros((1,), jnp.float32)
+    return [w1, b1, w2, b2]
+
+
+def pool_descriptor(lig: jnp.ndarray) -> jnp.ndarray:
+    """Pool a ligand feature tensor f32[B, A, F] to a descriptor f32[B, A].
+
+    The surrogate consumes a cheap per-ligand descriptor (mean feature value
+    per atom), standing in for the fingerprints used by Refs. [7], [8].
+    """
+    return jnp.mean(lig, axis=-1)
+
+
+def surrogate_train_step(w1, b1, w2, b2, x, y):
+    """One SGD step.  Returns (loss, w1', b1', w2', b2')."""
+    params = [w1, b1, w2, b2]
+    loss, grads = jax.value_and_grad(surrogate_loss_ref)(params, x, y)
+    new = [p - SURR_LR * g for p, g in zip(params, grads)]
+    return (loss, *new)
+
+
+def surrogate_infer(w1, b1, w2, b2, x):
+    """Batched surrogate inference: x f32[B, D] -> f32[B]."""
+    return (surrogate_forward_ref([w1, b1, w2, b2], x),)
+
+
+def example_args():
+    """ShapeDtypeStructs for each artifact's example arguments."""
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    return {
+        "dock_cpu": (sd((CPU_BUNDLE, ATOMS, FEAT), f32), sd((GRID, FEAT), f32)),
+        "dock_gpu": (sd((GPU_BUNDLE, ATOMS, FEAT), f32), sd((GRID, FEAT), f32)),
+        "fingerprint": (sd((CPU_BUNDLE, ATOMS, FEAT), f32), sd((GRID, FEAT), f32)),
+        "surrogate_train": (
+            sd((SURR_IN, SURR_HIDDEN), f32),
+            sd((SURR_HIDDEN,), f32),
+            sd((SURR_HIDDEN, 1), f32),
+            sd((1,), f32),
+            sd((SURR_BATCH, SURR_IN), f32),
+            sd((SURR_BATCH,), f32),
+        ),
+        "surrogate_infer": (
+            sd((SURR_IN, SURR_HIDDEN), f32),
+            sd((SURR_HIDDEN,), f32),
+            sd((SURR_HIDDEN, 1), f32),
+            sd((1,), f32),
+            sd((SURR_BATCH, SURR_IN), f32),
+        ),
+    }
+
+
+ENTRY_POINTS = {
+    "dock_cpu": dock_cpu,
+    "dock_gpu": dock_gpu,
+    "fingerprint": fingerprint,
+    "surrogate_train": surrogate_train_step,
+    "surrogate_infer": surrogate_infer,
+}

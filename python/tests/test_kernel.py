@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas docking kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value regimes; every case asserts allclose
+against ``ref.dock_score_ref``.  This is the CORE correctness signal for
+the kernel — the rust-side PJRT tests then pin the same numerics through
+the AOT artifacts.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.dock import dock_score_kernel
+from compile.kernels.ref import dock_score_ref, dock_score_poses_ref, rotate_receptor_ref
+
+hypothesis.settings.register_profile(
+    "kernel", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+@hypothesis.given(
+    b=st.integers(1, 8),
+    a=st.sampled_from([8, 16, 32]),
+    f=st.sampled_from([8, 16, 32]),
+    gt_pow=st.integers(0, 2),
+    n_gtiles=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_shapes(b, a, f, gt_pow, n_gtiles, seed):
+    gt = 16 * (2**gt_pow)
+    g = gt * n_gtiles
+    lig = rand(seed, (b, a, f))
+    rec = rand(seed + 1, (g, f))
+    got = dock_score_kernel(lig, rec, grid_tile=gt)
+    want = dock_score_ref(lig, rec)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(scale=st.sampled_from([1e-3, 1.0, 10.0]), seed=st.integers(0, 100))
+def test_kernel_value_regimes(scale, seed):
+    """Tiny and large magnitudes (m^4 term spans ~12 decades)."""
+    lig = rand(seed, (4, 32, 32)) * scale
+    rec = rand(seed + 7, (128, 32)) * scale
+    got = dock_score_kernel(lig, rec)
+    want = dock_score_ref(lig, rec)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_kernel_default_geometry():
+    lig = rand(0, (8, 32, 32))
+    rec = rand(1, (128, 32))
+    got = dock_score_kernel(lig, rec)
+    want = dock_score_ref(lig, rec)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert got.shape == (8,)
+    assert got.dtype == jnp.float32
+
+
+def test_kernel_single_tile():
+    """G == grid_tile: the accumulate path collapses to init+finalize."""
+    lig = rand(3, (2, 16, 16))
+    rec = rand(4, (64, 16))
+    got = dock_score_kernel(lig, rec, grid_tile=64)
+    want = dock_score_ref(lig, rec)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_rejects_ragged_grid():
+    lig = rand(0, (1, 8, 8))
+    rec = rand(1, (100, 8))  # 100 % 64 != 0
+    with pytest.raises(AssertionError):
+        dock_score_kernel(lig, rec, grid_tile=64)
+
+
+def test_kernel_under_jit():
+    """The kernel must lower inside jit (the AOT path jits the L2 graph)."""
+    lig = rand(5, (4, 32, 32))
+    rec = rand(6, (128, 32))
+    got = jax.jit(dock_score_kernel)(lig, rec)
+    want = dock_score_ref(lig, rec)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rotation_preserves_norms():
+    """Pose rotation is rigid in feature space: row norms are preserved."""
+    rec = rand(9, (128, 32))
+    for p in range(4):
+        rot = rotate_receptor_ref(rec, p, 4)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(rot, axis=-1),
+            jnp.linalg.norm(rec, axis=-1),
+            rtol=1e-5,
+        )
+
+
+def test_poses_take_min():
+    """Multi-pose score is the elementwise min over per-pose scores."""
+    lig = rand(10, (3, 32, 32))
+    rec = rand(11, (128, 32))
+    scores = jnp.stack(
+        [dock_score_ref(lig, rotate_receptor_ref(rec, p, 4)) for p in range(4)]
+    )
+    want = jnp.min(scores, axis=0)
+    got = dock_score_poses_ref(lig, rec, 4)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_score_is_permutation_invariant_in_batch():
+    """Scores are per-ligand: permuting the batch permutes the scores."""
+    lig = rand(12, (6, 32, 32))
+    rec = rand(13, (128, 32))
+    perm = jnp.array([3, 0, 5, 1, 4, 2])
+    got = dock_score_kernel(lig[perm], rec)
+    want = dock_score_kernel(lig, rec)[perm]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# --- fingerprint kernel ------------------------------------------------------
+
+from compile.kernels.fingerprint import fingerprint_kernel, fingerprint_ref
+
+
+@hypothesis.given(
+    b=st.integers(1, 6),
+    a=st.sampled_from([8, 16, 32]),
+    f=st.sampled_from([8, 16, 32]),
+    n_gtiles=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fingerprint_matches_ref(b, a, f, n_gtiles, seed):
+    gt = 32
+    pg = gt * n_gtiles
+    lig = rand(seed, (b, a, f))
+    rec = rand(seed + 3, (pg, f))
+    got = fingerprint_kernel(lig, rec, grid_tile=gt)
+    want = fingerprint_ref(lig, rec)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+def test_fingerprint_shape_and_range():
+    lig = rand(1, (4, 32, 32))
+    rec = rand(2, (128, 32))
+    fp = fingerprint_kernel(lig, rec)
+    assert fp.shape == (4, 32)
+    assert (np.asarray(fp) >= 0).all(), "squared affinities are non-negative"
+
+
+def test_fingerprint_determines_single_pose_score():
+    """Analytic link: with one pose, sum_a e(max m^2) == dock score,
+    because e(m) = m^4 - 2m^2 is monotone decreasing in m^2 on [0, 1]."""
+    lig = rand(7, (4, 32, 32)) * 0.9
+    rec = rand(8, (128, 32)) * 0.9
+    fp = fingerprint_ref(lig, rec)
+    recon = jnp.sum(fp * fp - 2.0 * fp, axis=-1)
+    want = dock_score_ref(lig, rec)
+    np.testing.assert_allclose(recon, want, rtol=1e-4, atol=1e-5)

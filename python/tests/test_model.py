@@ -1,0 +1,96 @@
+"""L2 correctness: model graphs, AOT lowering, surrogate fwd/bwd."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import featgen, model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "model", max_examples=20, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("model")
+
+
+def test_dock_score_matches_pose_ref():
+    lig = jnp.asarray(featgen.ligand_batch(1, 0, model.CPU_BUNDLE, model.ATOMS, model.FEAT))
+    rec = jnp.asarray(featgen.receptor_grid(2, model.GRID, model.FEAT))
+    got = model.dock_score(lig, rec)
+    want = ref.dock_score_poses_ref(lig, rec, model.N_POSE)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_entry_points_cover_artifacts():
+    assert set(model.ENTRY_POINTS) == {
+        "dock_cpu",
+        "dock_gpu",
+        "fingerprint",
+        "surrogate_train",
+        "surrogate_infer",
+    }
+    args = model.example_args()
+    assert set(args) == set(model.ENTRY_POINTS)
+
+
+def test_all_entry_points_lower():
+    """Every artifact must lower to HLO text (the `make artifacts` path)."""
+    from compile.aot import to_hlo_text
+
+    args = model.example_args()
+    for name, fn in model.ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*args[name])
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule"), f"{name}: bad HLO text"
+        assert len(text) > 200, f"{name}: suspiciously small HLO"
+
+
+def test_dock_outputs_shapes():
+    args = model.example_args()
+    out = jax.eval_shape(model.dock_cpu, *args["dock_cpu"])
+    assert out[0].shape == (model.CPU_BUNDLE,)
+    out = jax.eval_shape(model.dock_gpu, *args["dock_gpu"])
+    assert out[0].shape == (model.GPU_BUNDLE,)
+
+
+def test_surrogate_train_reduces_loss():
+    params = model.surrogate_init(0)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (model.SURR_BATCH, model.SURR_IN))
+    y = jax.random.uniform(jax.random.PRNGKey(2), (model.SURR_BATCH,))
+    losses = []
+    p = params
+    for _ in range(60):
+        loss, *p = model.surrogate_train_step(*p, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, f"{losses[0]} -> {losses[-1]}"
+
+
+def test_surrogate_grad_matches_fd():
+    """Spot-check jax.grad against a finite difference on one weight."""
+    params = model.surrogate_init(3)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (8, model.SURR_IN))
+    y = jax.random.uniform(jax.random.PRNGKey(5), (8,))
+    loss_fn = lambda p: ref.surrogate_loss_ref(p, x, y)
+    g = jax.grad(loss_fn)(params)
+    eps = 1e-3
+    p_hi = [q.at[0, 0].add(eps) if q.ndim == 2 and q.shape == params[0].shape else q for q in params]
+    p_lo = [q.at[0, 0].add(-eps) if q.ndim == 2 and q.shape == params[0].shape else q for q in params]
+    fd = (loss_fn(p_hi) - loss_fn(p_lo)) / (2 * eps)
+    np.testing.assert_allclose(g[0][0, 0], fd, rtol=5e-2, atol=1e-4)
+
+
+@hypothesis.given(st.integers(0, 2**31 - 1), st.integers(0, 10_000_000))
+def test_featgen_deterministic_and_bounded(seed, lig_id):
+    a = featgen.ligand_features(seed, lig_id, 4, 4)
+    b = featgen.ligand_features(seed, lig_id, 4, 4)
+    np.testing.assert_array_equal(a, b)
+    assert (a >= -1.0).all() and (a < 1.0).all()
+
+
+def test_pool_descriptor_shape():
+    lig = jnp.asarray(featgen.ligand_batch(1, 0, 4, model.ATOMS, model.FEAT))
+    d = model.pool_descriptor(lig)
+    assert d.shape == (4, model.ATOMS)
+    np.testing.assert_allclose(d[0, 0], jnp.mean(lig[0, 0]), rtol=1e-6)

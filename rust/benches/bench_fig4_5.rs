@@ -1,0 +1,60 @@
+//! Regenerates Figures 4a/4b (docking-time distributions of the proteins
+//! with shortest/longest mean docking time) and 5a/5b (their pilots'
+//! docking rates) from experiment 1.
+//!
+//!     cargo bench --bench bench_fig4_5
+
+use raptor::campaign::{self, figures};
+use raptor::metrics::TaskClass;
+
+fn main() {
+    let cfg = campaign::exp1(0.1);
+    let t0 = std::time::Instant::now();
+    let r = campaign::run(&cfg);
+    println!(
+        "exp1 at scale 0.1: {} docks, {} pilots, {:.1}s host",
+        r.total_done,
+        r.pilots.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let out = std::path::Path::new("results");
+    figures::write_figures(1, &r, out).unwrap();
+
+    // Show the figure shapes in the terminal: shortest/longest protein.
+    let (mut short, mut long) = (0usize, 0usize);
+    for (i, p) in r.pilots.iter().enumerate() {
+        if p.metrics.fn_durations.mean() < r.pilots[short].metrics.fn_durations.mean() {
+            short = i;
+        }
+        if p.metrics.fn_durations.mean() > r.pilots[long].metrics.fn_durations.mean() {
+            long = i;
+        }
+    }
+    for (label, idx, paper) in [
+        ("Fig 4a (shortest mean)", short, "long-tailed, short mean"),
+        ("Fig 4b (longest mean)", long, "long-tailed, mean up to ~70 s"),
+    ] {
+        let p = &r.pilots[idx];
+        println!(
+            "\n{label}: {} — mean {:.1} s, max {:.1} s (paper: {paper})",
+            p.protein,
+            p.metrics.fn_durations.mean(),
+            p.metrics.fn_durations.max()
+        );
+        println!("{}", p.metrics.fn_hist.ascii(40));
+    }
+    // Fig 5: per-pilot rates; report the plateau rate in docks/s.
+    for (label, idx) in [("Fig 5a", short), ("Fig 5b", long)] {
+        let p = &r.pilots[idx];
+        let rate = p.metrics.rate_series(Some(TaskClass::Function));
+        let peak = rate.points.iter().map(|&(_, v)| v).fold(0.0, f64::max);
+        println!(
+            "{label}: {} peak {:.0} docks/s over {:.0} s of pilot runtime",
+            p.protein,
+            peak,
+            p.finished_at - p.active_at
+        );
+    }
+    println!("\nfigure CSVs in results/fig4*.csv, results/fig5*.csv");
+}

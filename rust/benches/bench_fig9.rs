@@ -1,0 +1,43 @@
+//! Regenerates Figure 9 from experiment 4 at FULL paper scale (1,000
+//! Summit nodes / 6,000 GPUs; 57M mcule ligands via AutoDock-GPU-style
+//! 16-ligand bundles): (a) docking-time distribution, (b) docking rate
+//! with its fast ramp and ~11x10^6 docks/h plateau.
+//!
+//!     cargo bench --bench bench_fig9
+
+use raptor::campaign::{self, figures};
+use raptor::metrics::TaskClass;
+
+fn main() {
+    let cfg = campaign::exp4(1.0);
+    let t0 = std::time::Instant::now();
+    let r = campaign::run(&cfg);
+    println!(
+        "exp4 at FULL scale: {} GPU tasks (x16 docks), {:.1}s host",
+        r.total_done,
+        t0.elapsed().as_secs_f64()
+    );
+    figures::write_figures(4, &r, std::path::Path::new("results")).unwrap();
+
+    let p = &r.pilots[0];
+    println!(
+        "\nFig 9a: GPU-task time distribution — mean {:.1} s max {:.1} s (paper 36.2 / 263.9 s)",
+        p.metrics.fn_durations.mean(),
+        p.metrics.fn_durations.max()
+    );
+    println!("{}", p.metrics.fn_hist.ascii(40));
+
+    let rate = p.metrics.rate_series(Some(TaskClass::Function));
+    let peak = rate.points.iter().map(|&(_, v)| v).fold(0.0, f64::max);
+    println!(
+        "Fig 9b: peak {:.1}M docks/h, ramp to plateau in {:.0} s (paper: ~11.3M docks/h, very fast ramp)",
+        peak * 16.0 * 3600.0 / 1e6,
+        p.first_task_s
+    );
+    println!(
+        "utilization avg {:.1}% / steady {:.1}% (paper 95% / 95%; GPU profiling error ±5%)",
+        p.util.avg * 100.0,
+        p.util.steady * 100.0
+    );
+    println!("\nfigure CSVs in results/fig9{{a,b}}.csv");
+}

@@ -1,0 +1,75 @@
+//! Microbenchmark: PJRT docking-call latency — the real-mode function-task
+//! cost that replaces a 3–70 s docking program.
+//!
+//!     make artifacts && cargo bench --bench bench_runtime
+//!
+//! Measures per-call latency of the dock_cpu (8-ligand) and dock_gpu
+//! (16-ligand) artifacts, the featgen share of it, and multi-worker
+//! scaling across threads (each thread owns its engine, as in real mode).
+
+use std::time::Instant;
+
+use raptor::runtime::{artifacts_built, DockEngine};
+use raptor::workload::features;
+
+fn bench_engine(mut engine: DockEngine, label: &str, calls: u64) {
+    let bundle = engine.bundle();
+    // Warm up (first call pays receptor build + XLA warmup).
+    engine.dock(1, 0, 42).unwrap();
+    let t0 = Instant::now();
+    for i in 0..calls {
+        let scores = engine.dock(1, i * bundle as u64, 42).unwrap();
+        assert_eq!(scores.len(), bundle);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "  {label:<10} {calls} calls x {bundle} ligands: {:>8.1} us/call = {:>9.0} docks/s/executor",
+        dt / calls as f64 * 1e6,
+        calls as f64 * bundle as f64 / dt
+    );
+}
+
+fn main() {
+    if !artifacts_built() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let calls = 2000;
+    println!("== single-executor dock-call latency ==");
+    bench_engine(DockEngine::cpu().unwrap(), "dock_cpu", calls);
+    bench_engine(DockEngine::gpu_bundle().unwrap(), "dock_gpu", calls);
+
+    println!("\n== featgen share (input generation only) ==");
+    let t0 = Instant::now();
+    for i in 0..calls {
+        let lig = features::ligand_batch(1, i * 8, 8, features::ATOMS, features::FEAT);
+        std::hint::black_box(&lig);
+    }
+    println!(
+        "  ligand_batch(8): {:>8.1} us/call",
+        t0.elapsed().as_secs_f64() / calls as f64 * 1e6
+    );
+
+    println!("\n== multi-executor scaling (each thread owns engine+client) ==");
+    for threads in [1u32, 2, 4] {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut e = DockEngine::cpu().unwrap();
+                    let per = 500u64;
+                    for i in 0..per {
+                        e.dock(1, (t as u64 * per + i) * 8, 42).unwrap();
+                    }
+                    per * 8
+                })
+            })
+            .collect();
+        let docks: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {threads} executor(s): {:>9.0} docks/s total (incl. ~0.3s/thread engine bootstrap)",
+            docks as f64 / dt
+        );
+    }
+}

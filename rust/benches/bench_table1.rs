@@ -1,0 +1,40 @@
+//! Regenerates Table I: all four experiments, paper-vs-measured.
+//!
+//!     cargo bench --bench bench_table1
+//!
+//! Scales are chosen so the whole table reproduces in under ~a minute of
+//! host time; exp 3 and exp 4 run at FULL paper scale (exp 3: 8,336 nodes
+//! / 466,816 cores / 13.4M tasks).  Rates and task counts are
+//! extrapolated linearly in the node count; durations/utilization/phases
+//! are scale-invariant (see tests/sim_scaling.rs for the validation).
+
+use raptor::campaign::{self, table};
+use raptor::metrics::{print_comparison, Table1Row};
+
+fn main() {
+    // (experiment id, scale)
+    let plan = [(1u32, 0.1), (2, 0.2), (3, 1.0), (4, 1.0)];
+    let mut rows = Vec::new();
+    for (id, scale) in plan {
+        let cfg = campaign::by_id(id, scale);
+        let t0 = std::time::Instant::now();
+        let r = campaign::run(&cfg);
+        let host_s = t0.elapsed().as_secs_f64();
+        let mut measured = table::measured_row(&cfg, &r);
+        measured.id = id;
+        println!(
+            "--- experiment {id}: scale {scale}, {} tasks, {} events, {:.1}s host ({:.2}M ev/s) ---",
+            r.total_done,
+            r.events,
+            host_s,
+            r.events as f64 / host_s / 1e6
+        );
+        print_comparison(&Table1Row::paper()[(id - 1) as usize], &measured);
+        println!();
+        rows.push(measured);
+    }
+    // Machine-readable output for EXPERIMENTS.md.
+    let json = raptor::util::json::Json::Arr(rows.iter().map(|r| r.to_json()).collect());
+    raptor::util::write_file("results/table1_measured.json", &json.to_string()).unwrap();
+    println!("wrote results/table1_measured.json");
+}

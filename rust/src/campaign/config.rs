@@ -1,0 +1,274 @@
+//! Campaign configurations: the four experiments of §IV plus custom runs.
+//!
+//! Paper-scale simulations are expensive (experiment 2 completes 126M
+//! tasks), so every experiment takes a `scale` factor in (0, 1] that
+//! shrinks node and task counts together — concurrency-per-core, task
+//! durations and phase structure are scale-invariant, and rates
+//! extrapolate linearly in the node count (validated by
+//! `tests/sim_scaling.rs`).
+
+use crate::coordinator::{Policy, QueueModel, DEFAULT_BULK};
+use crate::pilot::PilotDescription;
+use crate::platform::{self, PlatformSpec, QueuePolicy, StallWindow};
+use crate::workload::{LigandLibrary, ProteinSet, ProteinTarget, UniformModel};
+
+/// One pilot's plan inside a campaign.
+#[derive(Debug, Clone)]
+pub struct PilotPlan {
+    pub desc: PilotDescription,
+    pub protein: ProteinTarget,
+    /// Function (docking) tasks for this pilot.
+    pub n_fn_tasks: u64,
+    /// Executable tasks (exp-3 heterogeneous mix) and their duration model.
+    pub n_ex_tasks: u64,
+    pub ex_model: UniformModel,
+    /// Virtual time at which RP submits this pilot.
+    pub submit_at: f64,
+}
+
+/// A full campaign configuration.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub name: &'static str,
+    pub platform: PlatformSpec,
+    pub queue: QueuePolicy,
+    pub pilots: Vec<PilotPlan>,
+    /// Coordinators per pilot.
+    pub n_coordinators: u32,
+    /// Nodes reserved for coordinator processes per pilot.
+    pub reserve_nodes: u32,
+    /// Tasks per bulk (paper default 128).
+    pub bulk_size: usize,
+    pub queue_model: QueueModel,
+    pub policy: Policy,
+    /// Ligand docks per task (1 for OpenEye; 16 for AutoDock-GPU bundles).
+    pub docks_per_task: u32,
+    pub seed: u64,
+    /// Metrics window (virtual seconds).
+    pub metrics_dt: f64,
+    /// Histogram range for task durations (seconds).
+    pub hist_max: f64,
+    /// Hard per-pilot run cap (exp 3's 1200 s window), else walltime.
+    pub run_cap_s: Option<f64>,
+    /// Scale factor applied (bookkeeping for extrapolation).
+    pub scale: f64,
+}
+
+impl CampaignConfig {
+    /// Total docks the campaign will perform.
+    pub fn total_docks(&self) -> u64 {
+        self.pilots
+            .iter()
+            .map(|p| (p.n_fn_tasks) * self.docks_per_task as u64)
+            .sum()
+    }
+
+    /// Total tasks (fn + exec).
+    pub fn total_tasks(&self) -> u64 {
+        self.pilots.iter().map(|p| p.n_fn_tasks + p.n_ex_tasks).sum()
+    }
+}
+
+fn scaled(v: u64, scale: f64) -> u64 {
+    ((v as f64 * scale).round() as u64).max(1)
+}
+
+fn scaled_nodes(v: u32, scale: f64) -> u32 {
+    ((v as f64 * scale).round() as u32).max(2)
+}
+
+/// Experiment 1: 31 pilots (one per protein) × 128 nodes on Frontera's
+/// normal queue; 6.6M OpenEye docks each; shared-FS staging (34/56 cores).
+pub fn exp1(scale: f64) -> CampaignConfig {
+    let set = ProteinSet::exp1_set(0xE1);
+    let lib = LigandLibrary::orderable_zinc();
+    let nodes = scaled_nodes(128, scale);
+    let n_tasks = scaled(lib.size, scale);
+    let pilots = set
+        .proteins
+        .into_iter()
+        .map(|protein| PilotPlan {
+            desc: PilotDescription::new(nodes, 48.0 * 3600.0),
+            protein,
+            n_fn_tasks: n_tasks,
+            n_ex_tasks: 0,
+            ex_model: UniformModel::exp3_executables(),
+            submit_at: 0.0,
+        })
+        .collect();
+    CampaignConfig {
+        name: "exp1",
+        platform: platform::frontera(),
+        queue: platform::frontera_normal(),
+        pilots,
+        n_coordinators: 1,
+        reserve_nodes: 1,
+        bulk_size: DEFAULT_BULK,
+        queue_model: QueueModel::zeromq_like(),
+        policy: Policy::PullBased,
+        docks_per_task: 1,
+        seed: 0x0E01,
+        metrics_dt: 60.0,
+        hist_max: 300.0,
+        run_cap_s: None,
+        scale,
+    }
+}
+
+/// Experiment 2: one pilot spanning 7,600 Frontera nodes (whole machine
+/// minus ~1000 system-reserved); 126M mcule docks; node-local staging
+/// (all 56 cores); 158 coordinators.
+pub fn exp2(scale: f64) -> CampaignConfig {
+    let lib = LigandLibrary::mcule_ultimate();
+    let nodes = scaled_nodes(7600, scale);
+    let n_coordinators = scaled_nodes(158, scale).max(1);
+    CampaignConfig {
+        name: "exp2",
+        platform: platform::frontera(),
+        queue: platform::reservation(24.0 * 3600.0),
+        pilots: vec![PilotPlan {
+            desc: PilotDescription::new(nodes, 24.0 * 3600.0).with_local_staging(),
+            protein: ProteinTarget::exp2_protein(),
+            n_fn_tasks: scaled(lib.size, scale),
+            n_ex_tasks: 0,
+            ex_model: UniformModel::exp3_executables(),
+            submit_at: 0.0,
+        }],
+        n_coordinators,
+        reserve_nodes: 0,
+        bulk_size: DEFAULT_BULK,
+        queue_model: QueueModel::zeromq_like(),
+        policy: Policy::PullBased,
+        docks_per_task: 1,
+        seed: 0x0E02,
+        metrics_dt: 10.0,
+        hist_max: 120.0,
+        run_cap_s: None,
+        scale,
+    }
+}
+
+/// Experiment 3: one pilot on the whole machine (8,336 nodes / 466,816
+/// cores), 8 coordinators × 1041 workers, heterogeneous workload: 6.69M
+/// OpenEye function tasks (60 s cutoff) + 6.69M `stress` executables
+/// (uniform 0–20 s), with the observed ~150 s FS stall at ~800 s.
+pub fn exp3(scale: f64) -> CampaignConfig {
+    let lib = LigandLibrary::orderable_zinc_exp3();
+    let nodes = scaled_nodes(8336, scale);
+    let n_coordinators = if scale >= 0.5 { 8 } else { 4.max((8.0 * scale) as u32).max(1) };
+    let reserve = n_coordinators;
+    let mut platform = platform::frontera();
+    platform.fs = platform.fs.with_stall(StallWindow {
+        start: 800.0,
+        duration: 150.0,
+        extra: 220.0,
+        fraction: 0.35,
+    });
+    CampaignConfig {
+        name: "exp3",
+        platform,
+        queue: platform::reservation(3.0 * 3600.0),
+        pilots: vec![PilotPlan {
+            desc: PilotDescription::new(nodes, 3.0 * 3600.0).with_local_staging(),
+            protein: ProteinTarget::clpro_6lu7(),
+            n_fn_tasks: scaled(lib.size, scale),
+            n_ex_tasks: scaled(lib.size, scale),
+            ex_model: UniformModel::exp3_executables(),
+            submit_at: 0.0,
+        }],
+        n_coordinators,
+        reserve_nodes: reserve,
+        bulk_size: DEFAULT_BULK,
+        queue_model: QueueModel::zeromq_like(),
+        policy: Policy::PullBased,
+        docks_per_task: 1,
+        seed: 0x0E03,
+        metrics_dt: 10.0,
+        hist_max: 360.0,
+        run_cap_s: Some(1200.0),
+        scale,
+    }
+}
+
+/// Experiment 4: one pilot, 1,000 Summit nodes / 6,000 GPUs; AutoDock-GPU
+/// docks 57M mcule ligands in 16-ligand GPU bundles.
+pub fn exp4(scale: f64) -> CampaignConfig {
+    let lib = LigandLibrary::mcule_exp4();
+    let nodes = scaled_nodes(1000, scale);
+    // One task = one 16-ligand GPU call.
+    let gpu_tasks = scaled(lib.size / 16, scale);
+    CampaignConfig {
+        name: "exp4",
+        platform: platform::summit(),
+        queue: platform::summit_batch(),
+        pilots: vec![PilotPlan {
+            desc: PilotDescription::new(nodes, 12.0 * 3600.0)
+                .with_local_staging()
+                .with_gpus(),
+            protein: ProteinTarget::exp4_protein(),
+            n_fn_tasks: gpu_tasks,
+            n_ex_tasks: 0,
+            ex_model: UniformModel::exp3_executables(),
+            submit_at: 0.0,
+        }],
+        n_coordinators: 2,
+        reserve_nodes: 0,
+        bulk_size: DEFAULT_BULK,
+        queue_model: QueueModel::zeromq_like(),
+        policy: Policy::PullBased,
+        docks_per_task: 16,
+        seed: 0x0E04,
+        metrics_dt: 10.0,
+        hist_max: 300.0,
+        run_cap_s: None,
+        scale,
+    }
+}
+
+/// Experiment config by paper number (1..=4).
+pub fn by_id(id: u32, scale: f64) -> CampaignConfig {
+    match id {
+        1 => exp1(scale),
+        2 => exp2(scale),
+        3 => exp3(scale),
+        4 => exp4(scale),
+        _ => panic!("unknown experiment {id} (paper has 1..=4)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_configs_match_paper_shapes() {
+        let e1 = exp1(1.0);
+        assert_eq!(e1.pilots.len(), 31);
+        assert_eq!(e1.total_docks(), 31 * 6_600_000);
+        let e2 = exp2(1.0);
+        assert_eq!(e2.pilots[0].desc.nodes, 7600);
+        assert_eq!(e2.n_coordinators, 158);
+        let e3 = exp3(1.0);
+        assert_eq!(e3.total_tasks(), 2 * 6_685_316);
+        assert_eq!(e3.n_coordinators, 8);
+        assert!(e3.platform.fs.stalls.len() == 1);
+        let e4 = exp4(1.0);
+        assert_eq!(e4.docks_per_task, 16);
+        assert_eq!(e4.pilots[0].desc.total_slots(&e4.platform), 6000);
+    }
+
+    #[test]
+    fn scaling_shrinks_proportionally() {
+        let full = exp2(1.0);
+        let tenth = exp2(0.1);
+        assert_eq!(tenth.pilots[0].desc.nodes, 760);
+        let ratio = tenth.pilots[0].n_fn_tasks as f64 / full.pilots[0].n_fn_tasks as f64;
+        assert!((ratio - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown experiment")]
+    fn bad_id_panics() {
+        by_id(9, 1.0);
+    }
+}

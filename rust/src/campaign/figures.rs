@@ -1,0 +1,155 @@
+//! Figure-data extraction: writes the CSV series behind every figure of
+//! §IV (Figs 4–9) from a finished `CampaignResult`.
+
+use std::path::Path;
+
+use crate::metrics::report::{write_histogram_csv, write_series_csv};
+use crate::metrics::TaskClass;
+use crate::util::stats::Histogram;
+
+use super::simrun::CampaignResult;
+
+/// Write experiment-1 figures: per-protein docking-time histograms for the
+/// shortest/longest-mean proteins (Fig 4a/b) and their pilots' docking
+/// rates (Fig 5a/b).
+pub fn write_exp1_figures(r: &CampaignResult, out: &Path) -> anyhow::Result<()> {
+    // Identify shortest/longest mean docking time among pilots.
+    let (mut short, mut long) = (0usize, 0usize);
+    for (i, p) in r.pilots.iter().enumerate() {
+        if p.metrics.fn_durations.mean() < r.pilots[short].metrics.fn_durations.mean() {
+            short = i;
+        }
+        if p.metrics.fn_durations.mean() > r.pilots[long].metrics.fn_durations.mean() {
+            long = i;
+        }
+    }
+    let ps = &r.pilots[short];
+    let pl = &r.pilots[long];
+    write_histogram_csv(out.join("fig4a.csv"), &ps.metrics.fn_hist, "dock_time_s")?;
+    write_histogram_csv(out.join("fig4b.csv"), &pl.metrics.fn_hist, "dock_time_s")?;
+    write_series_csv(
+        out.join("fig5a.csv"),
+        &ps.metrics.rate_series(Some(TaskClass::Function)),
+        ("t_s", "docks_per_s"),
+    )?;
+    write_series_csv(
+        out.join("fig5b.csv"),
+        &pl.metrics.rate_series(Some(TaskClass::Function)),
+        ("t_s", "docks_per_s"),
+    )?;
+    Ok(())
+}
+
+/// Write experiment-2 figures: docking-time distribution (6a), docking
+/// concurrency (6b), docking rate (6c).
+pub fn write_exp2_figures(r: &CampaignResult, out: &Path) -> anyhow::Result<()> {
+    let p = &r.pilots[0];
+    write_histogram_csv(out.join("fig6a.csv"), &p.metrics.fn_hist, "dock_time_s")?;
+    write_series_csv(
+        out.join("fig6b.csv"),
+        &p.metrics.concurrency_series(),
+        ("t_s", "concurrent_docks"),
+    )?;
+    write_series_csv(
+        out.join("fig6c.csv"),
+        &p.metrics.rate_series(Some(TaskClass::Function)),
+        ("t_s", "docks_per_s"),
+    )?;
+    Ok(())
+}
+
+/// Write experiment-3 figures: worker-rank startup histogram (7a),
+/// function/executable runtime distributions (7b), completion rates and
+/// concurrency (8a/8b).
+pub fn write_exp3_figures(r: &CampaignResult, out: &Path) -> anyhow::Result<()> {
+    let p = &r.pilots[0];
+    let mut h = Histogram::new(0.0, 400.0, 80);
+    for &x in &p.worker_ready_offsets {
+        h.push(x);
+    }
+    write_histogram_csv(out.join("fig7a.csv"), &h, "rank_startup_s")?;
+    write_histogram_csv(out.join("fig7b_fn.csv"), &p.metrics.fn_hist, "task_runtime_s")?;
+    write_histogram_csv(out.join("fig7b_exec.csv"), &p.metrics.ex_hist, "task_runtime_s")?;
+    write_series_csv(
+        out.join("fig8a_all.csv"),
+        &p.metrics.rate_series(None),
+        ("t_s", "tasks_per_s"),
+    )?;
+    write_series_csv(
+        out.join("fig8a_fn.csv"),
+        &p.metrics.rate_series(Some(TaskClass::Function)),
+        ("t_s", "tasks_per_s"),
+    )?;
+    write_series_csv(
+        out.join("fig8a_exec.csv"),
+        &p.metrics.rate_series(Some(TaskClass::Executable)),
+        ("t_s", "tasks_per_s"),
+    )?;
+    write_series_csv(
+        out.join("fig8b.csv"),
+        &p.metrics.concurrency_series(),
+        ("t_s", "concurrent_tasks"),
+    )?;
+    Ok(())
+}
+
+/// Write experiment-4 figures: docking-time distribution (9a) and docking
+/// rate (9b).
+pub fn write_exp4_figures(r: &CampaignResult, out: &Path) -> anyhow::Result<()> {
+    let p = &r.pilots[0];
+    write_histogram_csv(out.join("fig9a.csv"), &p.metrics.fn_hist, "dock_time_s")?;
+    // Rate in docks/s = GPU-task rate x 16.
+    let mut rate = p.metrics.rate_series(Some(TaskClass::Function));
+    for pt in &mut rate.points {
+        pt.1 *= r.docks_per_task as f64;
+    }
+    write_series_csv(out.join("fig9b.csv"), &rate, ("t_s", "docks_per_s"))?;
+    Ok(())
+}
+
+/// Dispatch by experiment id.
+pub fn write_figures(id: u32, r: &CampaignResult, out: &Path) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out)?;
+    match id {
+        1 => write_exp1_figures(r, out),
+        2 => write_exp2_figures(r, out),
+        3 => write_exp3_figures(r, out),
+        4 => write_exp4_figures(r, out),
+        _ => anyhow::bail!("unknown experiment {id}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::{config, simrun};
+
+    #[test]
+    fn exp3_figures_written() {
+        let cfg = config::exp3(0.003);
+        let r = simrun::run(&cfg);
+        let dir = std::env::temp_dir().join("raptor_fig_test");
+        write_figures(3, &r, &dir).unwrap();
+        for f in [
+            "fig7a.csv",
+            "fig7b_fn.csv",
+            "fig7b_exec.csv",
+            "fig8a_all.csv",
+            "fig8b.csv",
+        ] {
+            let text = std::fs::read_to_string(dir.join(f)).unwrap();
+            assert!(text.lines().count() > 2, "{f} nearly empty");
+        }
+    }
+
+    #[test]
+    fn exp1_figures_pick_extremes() {
+        let mut cfg = config::exp1(0.002);
+        cfg.pilots.truncate(4);
+        let r = simrun::run(&cfg);
+        let dir = std::env::temp_dir().join("raptor_fig_test1");
+        write_figures(1, &r, &dir).unwrap();
+        assert!(dir.join("fig4a.csv").exists());
+        assert!(dir.join("fig5b.csv").exists());
+    }
+}

@@ -1,0 +1,11 @@
+//! Campaign layer: experiment definitions (§IV) and the simulated driver
+//! that regenerates Table I and Figures 4–9.
+
+pub mod config;
+pub mod figures;
+pub mod simrun;
+pub mod table;
+
+pub use config::{by_id, exp1, exp2, exp3, exp4, CampaignConfig, PilotPlan};
+pub use simrun::{run, CampaignResult, PilotResult};
+pub use table::measured_row;

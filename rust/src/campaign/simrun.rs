@@ -1,0 +1,621 @@
+//! The simulated campaign driver: runs a `CampaignConfig` through the
+//! discrete-event engine at (scaled) paper scale and produces everything
+//! Table I and the figures need.
+//!
+//! The coordinator/worker *logic* here mirrors the real-mode code paths:
+//! pull-based bulk dispatch with prefetch (`dispatch::should_refill`),
+//! per-coordinator queue service (`QueueModel`), startup sequencing
+//! (`pilot::plan_startup`), batch admission (`PilotManager`).
+
+use crate::coordinator::dispatch::should_refill;
+use crate::metrics::{StreamMetrics, TaskClass, Utilization};
+use crate::pilot::{plan_startup, PilotManager, StartupPlan};
+use crate::sim::Engine;
+use crate::util::rng::SplitMix64;
+
+use super::config::{CampaignConfig, PilotPlan};
+
+/// Simulation events.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Poll the batch system for job starts.
+    BatchPoll,
+    /// Worker rank finished startup + comm bootstrap.
+    WorkerReady { p: u32, c: u32, w: u32 },
+    /// A task bulk arrived at a worker.
+    BulkArrive { p: u32, c: u32, w: u32, n_fn: u32, n_ex: u32 },
+    /// One task finished on a worker slot.
+    TaskDone {
+        p: u32,
+        c: u32,
+        w: u32,
+        class: TaskClass,
+        started: f64,
+    },
+    /// Hard run cap (exp 3's 1200 s window) or walltime reached.
+    Deadline { p: u32 },
+}
+
+#[derive(Debug)]
+struct WorkerSim {
+    slots: u32,
+    slots_free: u32,
+    buffer_fn: u32,
+    buffer_ex: u32,
+    fetching: bool,
+    ready: bool,
+}
+
+impl WorkerSim {
+    fn buffered(&self) -> u32 {
+        self.buffer_fn + self.buffer_ex
+    }
+}
+
+#[derive(Debug)]
+struct CoordSim {
+    fn_rem: u64,
+    ex_rem: u64,
+    /// Queue-server busy-until time (QueueModel serialization).
+    server_free: f64,
+    workers: Vec<WorkerSim>,
+}
+
+impl CoordSim {
+    fn rem(&self) -> u64 {
+        self.fn_rem + self.ex_rem
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PilotPhase {
+    Queued,
+    Active,
+    Finished,
+}
+
+struct PilotSim {
+    plan: PilotPlan,
+    pm_id: u32,
+    phase: PilotPhase,
+    active_at: f64,
+    finished_at: f64,
+    startup: Option<StartupPlan>,
+    coords: Vec<CoordSim>,
+    metrics: StreamMetrics,
+    capacity: f64,
+    expected: u64,
+    done: u64,
+    in_flight: u64,
+    first_task_at: f64,
+    rng: SplitMix64,
+}
+
+/// Per-pilot outcome.
+pub struct PilotResult {
+    pub protein: String,
+    pub active_at: f64,
+    pub finished_at: f64,
+    /// Startup until last worker ready (Table I "Startup").
+    pub startup_total_s: f64,
+    /// Time from pilot start to first task executing ("1st Task").
+    pub first_task_s: f64,
+    pub capacity: f64,
+    pub metrics: StreamMetrics,
+    pub util: Utilization,
+    /// Worker-ready offsets relative to pilot start (Fig 7a).
+    pub worker_ready_offsets: Vec<f64>,
+}
+
+/// Whole-campaign outcome.
+pub struct CampaignResult {
+    pub name: &'static str,
+    pub scale: f64,
+    pub docks_per_task: u32,
+    pub pilots: Vec<PilotResult>,
+    /// Aggregate metrics in absolute campaign time.
+    pub global: StreamMetrics,
+    pub total_done: u64,
+    /// Engine events processed (perf counter).
+    pub events: u64,
+    /// Host wall time of the simulation (ms).
+    pub sim_wall_ms: f64,
+}
+
+/// Run one campaign to completion.
+pub fn run(cfg: &CampaignConfig) -> CampaignResult {
+    let wall0 = std::time::Instant::now();
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut pm = PilotManager::new(cfg.platform.clone(), cfg.queue, rng.next_u64());
+    let hist_bins = 120;
+
+    let mut pilots: Vec<PilotSim> = cfg
+        .pilots
+        .iter()
+        .enumerate()
+        .map(|(i, plan)| PilotSim {
+            plan: plan.clone(),
+            pm_id: u32::MAX,
+            phase: PilotPhase::Queued,
+            active_at: f64::NAN,
+            finished_at: f64::NAN,
+            startup: None,
+            coords: Vec::new(),
+            metrics: StreamMetrics::new(cfg.metrics_dt, cfg.hist_max, hist_bins),
+            capacity: 0.0,
+            expected: plan.n_fn_tasks + plan.n_ex_tasks,
+            done: 0,
+            in_flight: 0,
+            first_task_at: f64::INFINITY,
+            rng: SplitMix64::new(cfg.seed ^ (i as u64 + 1).wrapping_mul(0xA5A5_5A5A_0F0F_F0F0)),
+        })
+        .collect();
+
+    // §Perf: for single-pilot campaigns the global collector would be an
+    // exact duplicate of the pilot's — skip the double bookkeeping on the
+    // hot path and clone at the end instead.
+    let single_pilot = pilots.len() == 1;
+    let mut global = StreamMetrics::new(cfg.metrics_dt, cfg.hist_max, hist_bins);
+
+    let mut eng: Engine<Ev> = Engine::new();
+    for p in pilots.iter_mut() {
+        p.pm_id = pm
+            .submit(p.plan.submit_at, p.plan.desc.clone())
+            .expect("pilot submission must satisfy the queue policy");
+    }
+    eng.schedule(0.0, Ev::BatchPoll);
+
+    // Main event loop.
+    while let Some((t, ev)) = eng.pop() {
+        match ev {
+            Ev::BatchPoll => {
+                let started = pm.advance(t);
+                for pm_id in started {
+                    let idx = pilots.iter().position(|p| p.pm_id == pm_id).unwrap();
+                    activate_pilot(cfg, &mut pilots[idx], idx as u32, t, &mut eng);
+                }
+                // Re-poll when the next queued pilot becomes eligible.
+                if !pm.all_done() {
+                    if let Some(next) = pm.next_eligible_time() {
+                        if next.is_finite() {
+                            eng.schedule(next.max(t + 1.0), Ev::BatchPoll);
+                        }
+                    }
+                }
+            }
+            Ev::WorkerReady { p, c, w } => {
+                let pilot = &mut pilots[p as usize];
+                if pilot.phase != PilotPhase::Active {
+                    continue;
+                }
+                pilot.coords[c as usize].workers[w as usize].ready = true;
+                try_fetch(cfg, pilot, p, c, w, t, &mut eng);
+            }
+            Ev::BulkArrive { p, c, w, n_fn, n_ex } => {
+                let pilot = &mut pilots[p as usize];
+                let wk = &mut pilot.coords[c as usize].workers[w as usize];
+                wk.fetching = false;
+                if pilot.phase != PilotPhase::Active {
+                    // Deadline dropped this pilot's work; bulk is discarded
+                    // (already subtracted from expected by the deadline).
+                    continue;
+                }
+                wk.buffer_fn += n_fn;
+                wk.buffer_ex += n_ex;
+                let g = (!single_pilot).then_some(&mut global);
+                start_tasks(cfg, pilot, p, c, w, t, g, &mut eng);
+                try_fetch(cfg, pilot, p, c, w, t, &mut eng);
+            }
+            Ev::TaskDone { p, c, w, class, started } => {
+                let pilot = &mut pilots[p as usize];
+                let dur = t - started;
+                pilot.metrics.finish(t, dur, 1.0, class);
+                if !single_pilot {
+                    global.finish(t, dur, 1.0, class);
+                }
+                pilot.done += 1;
+                pilot.in_flight -= 1;
+                pilot.coords[c as usize].workers[w as usize].slots_free += 1;
+                if pilot.phase == PilotPhase::Active {
+                    let g = (!single_pilot).then_some(&mut global);
+                    start_tasks(cfg, pilot, p, c, w, t, g, &mut eng);
+                    try_fetch(cfg, pilot, p, c, w, t, &mut eng);
+                }
+                if pilot.done >= pilot.expected && pilot.in_flight == 0 {
+                    finish_pilot(pilot, &mut pm, t, &mut eng);
+                }
+            }
+            Ev::Deadline { p } => {
+                let pilot = &mut pilots[p as usize];
+                if pilot.phase != PilotPhase::Active {
+                    continue;
+                }
+                // Stop fetching and drop buffered work; in-flight drains.
+                let mut dropped = 0u64;
+                for coord in &mut pilot.coords {
+                    dropped += coord.rem();
+                    coord.fn_rem = 0;
+                    coord.ex_rem = 0;
+                    for wk in &mut coord.workers {
+                        dropped += wk.buffered() as u64;
+                        wk.buffer_fn = 0;
+                        wk.buffer_ex = 0;
+                    }
+                }
+                pilot.expected -= dropped;
+                if pilot.done >= pilot.expected && pilot.in_flight == 0 {
+                    finish_pilot(pilot, &mut pm, t, &mut eng);
+                }
+            }
+        }
+    }
+
+    if single_pilot {
+        global = pilots[0].metrics.clone();
+    }
+    let total_done = pilots.iter().map(|p| p.done).sum();
+    let results = pilots
+        .into_iter()
+        .map(|p| {
+            let util = pilot_utilization(&p);
+            let startup = p.startup.as_ref();
+            PilotResult {
+                protein: p.plan.protein.name.clone(),
+                active_at: p.active_at,
+                finished_at: p.finished_at,
+                startup_total_s: startup.map(|s| s.total_s()).unwrap_or(0.0),
+                first_task_s: if p.first_task_at.is_finite() {
+                    p.first_task_at - p.active_at
+                } else {
+                    0.0
+                },
+                capacity: p.capacity,
+                util,
+                worker_ready_offsets: startup
+                    .map(|s| {
+                        let base = s.base_s();
+                        s.worker_ready_s.iter().map(|&x| base + x).collect()
+                    })
+                    .unwrap_or_default(),
+                metrics: p.metrics,
+            }
+        })
+        .collect();
+
+    CampaignResult {
+        name: cfg.name,
+        scale: cfg.scale,
+        docks_per_task: cfg.docks_per_task,
+        pilots: results,
+        global,
+        total_done,
+        events: eng.processed(),
+        sim_wall_ms: wall0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// Pilot became active: plan startup, partition resources, arm deadline.
+fn activate_pilot(
+    cfg: &CampaignConfig,
+    pilot: &mut PilotSim,
+    p: u32,
+    t: f64,
+    eng: &mut Engine<Ev>,
+) {
+    pilot.phase = PilotPhase::Active;
+    pilot.active_at = t;
+    let nodes = pilot.plan.desc.nodes;
+    let part = crate::coordinator::Partition::split(
+        nodes,
+        cfg.n_coordinators.min(nodes.saturating_sub(cfg.reserve_nodes).max(1)),
+        cfg.reserve_nodes.min(nodes.saturating_sub(1)),
+    );
+    let slots_per_node = pilot.plan.desc.slots_per_node(&cfg.platform);
+    assert!(slots_per_node > 0, "pilot has zero slots per node");
+    let n_workers = part.total_workers();
+    pilot.capacity = n_workers as f64 * slots_per_node as f64;
+
+    let local = pilot.plan.desc.local_staging && cfg.platform.node.local_ssd;
+    let plan = plan_startup(
+        &cfg.platform,
+        n_workers,
+        pilot.expected,
+        local,
+        &mut pilot.rng,
+    );
+
+    // Partition tasks across coordinators (stride counts).
+    let n_c = part.n_coordinators() as u64;
+    let fn_base = pilot.plan.n_fn_tasks / n_c;
+    let fn_extra = pilot.plan.n_fn_tasks % n_c;
+    let ex_base = pilot.plan.n_ex_tasks / n_c;
+    let ex_extra = pilot.plan.n_ex_tasks % n_c;
+
+    let base = plan.base_s();
+    let mut widx = 0usize;
+    pilot.coords = (0..part.n_coordinators())
+        .map(|c| {
+            let workers = (0..part.workers[c as usize])
+                .map(|w| {
+                    let ready_at = t + base + plan.worker_ready_s[widx];
+                    widx += 1;
+                    eng.schedule(ready_at, Ev::WorkerReady { p, c, w });
+                    WorkerSim {
+                        slots: slots_per_node,
+                        slots_free: slots_per_node,
+                        buffer_fn: 0,
+                        buffer_ex: 0,
+                        fetching: false,
+                        ready: false,
+                    }
+                })
+                .collect::<Vec<_>>();
+            CoordSim {
+                fn_rem: fn_base + u64::from((c as u64) < fn_extra),
+                ex_rem: ex_base + u64::from((c as u64) < ex_extra),
+                server_free: t + base,
+                workers,
+            }
+        })
+        .collect();
+    pilot.startup = Some(plan);
+
+    let cap = match (cfg.run_cap_s, pilot.plan.desc.walltime_s) {
+        (Some(c), w) => c.min(w),
+        (None, w) => w,
+    };
+    if cap.is_finite() {
+        eng.schedule(t + cap, Ev::Deadline { p });
+    }
+}
+
+/// Request the next bulk for worker (p, c, w) if warranted.
+fn try_fetch(
+    cfg: &CampaignConfig,
+    pilot: &mut PilotSim,
+    p: u32,
+    c: u32,
+    w: u32,
+    t: f64,
+    eng: &mut Engine<Ev>,
+) {
+    let coord = &mut pilot.coords[c as usize];
+    let wk = &coord.workers[w as usize];
+    if !wk.ready || wk.fetching || coord.rem() == 0 {
+        return;
+    }
+    if !should_refill(wk.buffered() as usize, wk.slots as usize, cfg.bulk_size) {
+        return;
+    }
+    // Compose a mixed bulk proportional to remaining counts.
+    let n = (cfg.bulk_size as u64).min(coord.rem());
+    let n_fn = ((n as f64 * coord.fn_rem as f64 / coord.rem() as f64).round() as u64)
+        .min(coord.fn_rem)
+        .min(n);
+    let n_ex = (n - n_fn).min(coord.ex_rem);
+    let n_fn = n - n_ex; // re-balance if ex ran short
+    let n_fn = n_fn.min(coord.fn_rem);
+    let total = n_fn + n_ex;
+    if total == 0 {
+        return;
+    }
+    coord.fn_rem -= n_fn;
+    coord.ex_rem -= n_ex;
+    let (arrival, free) = cfg.queue_model.serve(t, coord.server_free, total as usize);
+    coord.server_free = free;
+    coord.workers[w as usize].fetching = true;
+    eng.schedule(
+        arrival,
+        Ev::BulkArrive {
+            p,
+            c,
+            w,
+            n_fn: n_fn as u32,
+            n_ex: n_ex as u32,
+        },
+    );
+}
+
+/// Start buffered tasks on free slots of worker (p, c, w).
+#[allow(clippy::too_many_arguments)]
+fn start_tasks(
+    cfg: &CampaignConfig,
+    pilot: &mut PilotSim,
+    p: u32,
+    c: u32,
+    w: u32,
+    t: f64,
+    mut global: Option<&mut StreamMetrics>,
+    eng: &mut Engine<Ev>,
+) {
+    let local = pilot.plan.desc.local_staging && cfg.platform.node.local_ssd;
+    let read_overhead = cfg.platform.fs.read_overhead(local);
+    let active_at = pilot.active_at;
+    loop {
+        let wk = &mut pilot.coords[c as usize].workers[w as usize];
+        if wk.slots_free == 0 || wk.buffered() == 0 {
+            break;
+        }
+        // Pick class proportional to buffer composition (skip the RNG
+        // draw in the common single-class case — hot-path §Perf fix).
+        let class = if wk.buffer_ex == 0 {
+            wk.buffer_fn -= 1;
+            TaskClass::Function
+        } else if wk.buffer_fn == 0 {
+            wk.buffer_ex -= 1;
+            TaskClass::Executable
+        } else if pilot.rng.next_below(wk.buffered() as u64) < wk.buffer_fn as u64 {
+            wk.buffer_fn -= 1;
+            TaskClass::Function
+        } else {
+            wk.buffer_ex -= 1;
+            TaskClass::Executable
+        };
+        wk.slots_free -= 1;
+
+        let mut dur = match class {
+            TaskClass::Function => pilot.plan.protein.times.sample(&mut pilot.rng).seconds,
+            TaskClass::Executable => pilot.plan.ex_model.sample(&mut pilot.rng),
+        } + read_overhead;
+        // FS stall windows are relative to the pilot's start.
+        let nominal_finish = t + dur - active_at;
+        dur += cfg.platform.fs.stall_delay(nominal_finish, &mut pilot.rng);
+
+        pilot.metrics.start(t, 1.0);
+        if let Some(g) = global.as_deref_mut() {
+            g.start(t, 1.0);
+        }
+        pilot.in_flight += 1;
+        pilot.first_task_at = pilot.first_task_at.min(t);
+        eng.schedule(
+            t + dur,
+            Ev::TaskDone {
+                p,
+                c,
+                w,
+                class,
+                started: t,
+            },
+        );
+    }
+}
+
+fn finish_pilot(pilot: &mut PilotSim, pm: &mut PilotManager, t: f64, eng: &mut Engine<Ev>) {
+    pilot.phase = PilotPhase::Finished;
+    pilot.finished_at = t;
+    pm.finish(pilot.pm_id);
+    // Freed nodes may admit queued pilots.
+    eng.schedule_in(1.0, Ev::BatchPoll);
+}
+
+/// Per-pilot utilization over [active_at, finished_at].
+fn pilot_utilization(p: &PilotSim) -> Utilization {
+    let conc = p.metrics.concurrency_series();
+    let end = if p.finished_at.is_finite() {
+        p.finished_at
+    } else {
+        p.metrics.makespan()
+    };
+    if p.capacity <= 0.0 || end <= p.active_at {
+        return Utilization {
+            avg: 0.0,
+            steady: 0.0,
+            steady_from: 0.0,
+            steady_to: 0.0,
+        };
+    }
+    let avg = conc.mean_over(p.active_at, end) / p.capacity;
+    let peak = p.metrics.peak_concurrency();
+    let thresh = peak * 0.90;
+    let (mut from, mut to, mut seen) = (0.0, 0.0, false);
+    for &(t, v) in &conc.points {
+        if v >= thresh {
+            if !seen {
+                from = t;
+                seen = true;
+            }
+            to = t;
+        }
+    }
+    let steady = if to > from {
+        conc.mean_over(from, to) / p.capacity
+    } else {
+        avg
+    };
+    Utilization {
+        avg: avg.clamp(0.0, 1.0),
+        steady: steady.clamp(0.0, 1.0),
+        steady_from: from,
+        steady_to: to,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::config;
+
+    /// A miniature campaign completes every task and reaches high steady
+    /// utilization — the core conservation + utilization signal.
+    #[test]
+    fn tiny_exp2_conserves_tasks_and_utilizes() {
+        let cfg = config::exp2(0.004); // 30 nodes, ~500k tasks
+        let expected = cfg.total_tasks();
+        let r = run(&cfg);
+        assert_eq!(r.total_done, expected, "task conservation broken");
+        let p = &r.pilots[0];
+        assert!(
+            p.util.steady > 0.90,
+            "steady utilization {} < 0.90",
+            p.util.steady
+        );
+        assert!(p.util.avg > 0.5, "avg utilization {}", p.util.avg);
+        assert!(p.first_task_s > 0.0, "first task time must be positive");
+    }
+
+    /// Deadline-capped campaigns drain without losing accounting.
+    #[test]
+    fn exp3_deadline_drains() {
+        let mut cfg = config::exp3(0.01);
+        cfg.run_cap_s = Some(400.0); // aggressive cap to force drops
+        let r = run(&cfg);
+        assert!(r.total_done > 0);
+        assert!(
+            r.total_done < cfg.total_tasks(),
+            "cap did not drop anything"
+        );
+        let p = &r.pilots[0];
+        assert!(p.finished_at.is_finite(), "pilot never finished");
+    }
+
+    /// Determinism: identical seeds → identical traces.
+    #[test]
+    fn runs_are_deterministic() {
+        let cfg = config::exp4(0.01);
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.total_done, b.total_done);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.global.makespan(), b.global.makespan());
+        assert_eq!(
+            a.pilots[0].first_task_s,
+            b.pilots[0].first_task_s
+        );
+    }
+
+    /// Mixed fn/exec workloads complete both classes fully.
+    #[test]
+    fn exp3_mixed_classes_complete() {
+        let cfg = config::exp3(0.005);
+        let r = run(&cfg);
+        let m = &r.pilots[0].metrics;
+        assert_eq!(
+            m.fn_durations.count(),
+            cfg.pilots[0].n_fn_tasks,
+            "function tasks lost"
+        );
+        assert_eq!(
+            m.ex_durations.count(),
+            cfg.pilots[0].n_ex_tasks,
+            "executable tasks lost"
+        );
+        // Cutoff respected (plus stall smear up to ~360 s).
+        assert!(m.fn_durations.max() <= 60.0 + 220.0 + 1.0);
+    }
+
+    /// Multiple pilots through the normal queue: staggered, all complete.
+    #[test]
+    fn exp1_staggered_pilots_complete() {
+        let mut cfg = config::exp1(0.002);
+        cfg.pilots.truncate(5);
+        let r = run(&cfg);
+        assert_eq!(
+            r.total_done,
+            cfg.pilots.iter().map(|p| p.n_fn_tasks).sum::<u64>()
+        );
+        // Queue waits must stagger activations.
+        let mut starts: Vec<f64> = r.pilots.iter().map(|p| p.active_at).collect();
+        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(starts[1] > starts[0], "no staggering");
+    }
+}

@@ -1,0 +1,105 @@
+//! RAPTOR configuration: the knobs the paper exposes through the
+//! `rp.raptor.coordinator` interface (worker description, counts, cores,
+//! bulk size) plus reproduction-specific execution options.
+
+use super::dispatch::{Policy, DEFAULT_BULK};
+
+/// What a worker's executor slots run for *function* tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Real docking via the AOT `dock_cpu` artifact (OpenEye analogue).
+    PjrtCpu,
+    /// Real docking via the 16-ligand `dock_gpu` artifact (AutoDock
+    /// analogue).
+    PjrtGpuBundle,
+    /// No PJRT: scores are a cheap deterministic hash of the call.  Used
+    /// by tests and by exec-heavy examples where docking is not the
+    /// point.
+    Synthetic,
+}
+
+/// Real-mode session configuration (the `dscr` of the paper's API).
+#[derive(Debug, Clone)]
+pub struct RaptorConfig {
+    /// Worker count (paper: one worker per node).
+    pub n_workers: u32,
+    /// Executor slots per worker (paper: cores-per-node, `cpn`).
+    pub executors_per_worker: u32,
+    /// Tasks per bulk (paper default 128).
+    pub bulk_size: usize,
+    /// Max bulks buffered in the coordinator queue (backpressure bound).
+    pub queue_capacity: usize,
+    /// Dispatch policy (real mode supports PullBased; others are
+    /// simulated for ablations).
+    pub policy: Policy,
+    /// Function-task engine.
+    pub engine: EngineKind,
+    /// Multiplier on executable-task nominal durations (tests use ~0 to
+    /// avoid real sleeping).
+    pub exec_time_scale: f64,
+    /// Retain every TaskResult in the report (memory-heavy; tests only).
+    pub keep_results: bool,
+    /// Failure-management policy (paper §VI future work, implemented
+    /// here): failed tasks are resubmitted up to this many times before
+    /// being reported Failed.
+    pub max_retries: u32,
+}
+
+impl Default for RaptorConfig {
+    fn default() -> Self {
+        Self {
+            n_workers: 2,
+            executors_per_worker: 2,
+            bulk_size: DEFAULT_BULK,
+            queue_capacity: 8,
+            policy: Policy::PullBased,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            keep_results: false,
+            max_retries: 0,
+        }
+    }
+}
+
+impl RaptorConfig {
+    /// Total executor slots (the session's core capacity).
+    pub fn capacity(&self) -> u32 {
+        self.n_workers * self.executors_per_worker
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_workers > 0, "need at least one worker");
+        anyhow::ensure!(self.executors_per_worker > 0, "need executor slots");
+        anyhow::ensure!(self.bulk_size > 0, "bulk size must be positive");
+        anyhow::ensure!(self.queue_capacity > 0, "queue capacity must be positive");
+        anyhow::ensure!(
+            self.exec_time_scale >= 0.0,
+            "exec_time_scale must be non-negative"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RaptorConfig::default().validate().unwrap();
+        assert_eq!(RaptorConfig::default().capacity(), 4);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = RaptorConfig::default();
+        c.n_workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = RaptorConfig::default();
+        c.bulk_size = 0;
+        assert!(c.validate().is_err());
+        let mut c = RaptorConfig::default();
+        c.exec_time_scale = -1.0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,396 @@
+//! The RAPTOR coordinator (real mode): the paper's
+//! `rp.raptor.coordinator` API — `submit`, `start`, `join`, `stop` — over
+//! a bounded bulk queue and a worker pool.
+//!
+//! Tasks are submitted (before or after `start`), batched into bulks of
+//! `bulk_size` (§III design choice 5), pushed through the bounded queue
+//! (backpressure), pulled by executor slots, and their results are
+//! collected by `join`, which also drives the user callback.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::metrics::{utilization, Timeline, Utilization};
+use crate::task::{TaskDesc, TaskResult, TaskState};
+
+use super::config::RaptorConfig;
+use super::queue::BulkQueue;
+use super::worker::WorkerPool;
+
+/// Result-callback type (the paper's status callbacks).
+pub type ResultCallback = Box<dyn FnMut(&TaskResult) + Send>;
+
+/// Final report of one coordinator run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Tasks that reached a terminal state, by state.
+    pub done: u64,
+    pub failed: u64,
+    pub canceled: u64,
+    /// Wall-clock duration of the run (s, from `start` to `join` end).
+    pub wall_s: f64,
+    /// Time from `start` to the first task starting (Table I "1st Task").
+    pub first_task_s: f64,
+    /// Task timeline (per-task records).
+    pub timeline: Timeline,
+    /// Utilization vs the configured capacity.
+    pub utilization: Utilization,
+    /// Completed-task throughput (tasks/s over the whole run).
+    pub rate_per_s: f64,
+    /// Retained results (when `cfg.keep_results`).
+    pub results: Vec<TaskResult>,
+}
+
+/// Coordinator states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Created,
+    Started,
+    Finished,
+}
+
+/// The real-mode RAPTOR coordinator.
+pub struct Coordinator {
+    cfg: RaptorConfig,
+    submit_tx: Option<Sender<TaskDesc>>,
+    submit_rx: Option<Receiver<TaskDesc>>,
+    submitted: Arc<AtomicU64>,
+    queue: Arc<BulkQueue<TaskDesc>>,
+    results_rx: Option<Receiver<TaskResult>>,
+    results_tx: Option<Sender<TaskResult>>,
+    pool: Option<WorkerPool>,
+    feeder: Option<std::thread::JoinHandle<()>>,
+    callback: Option<ResultCallback>,
+    phase: Phase,
+    t0: Instant,
+}
+
+impl Coordinator {
+    pub fn new(cfg: RaptorConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let (submit_tx, submit_rx) = channel();
+        let (results_tx, results_rx) = channel();
+        let queue = Arc::new(BulkQueue::new(cfg.queue_capacity));
+        Ok(Self {
+            cfg,
+            submit_tx: Some(submit_tx),
+            submit_rx: Some(submit_rx),
+            submitted: Arc::new(AtomicU64::new(0)),
+            queue,
+            results_rx: Some(results_rx),
+            results_tx: Some(results_tx),
+            pool: None,
+            feeder: None,
+            callback: None,
+            phase: Phase::Created,
+            t0: Instant::now(),
+        })
+    }
+
+    /// Register a per-result callback (must precede `join`).
+    pub fn on_result(&mut self, cb: ResultCallback) {
+        self.callback = Some(cb);
+    }
+
+    /// Submit tasks (allowed before and after `start`, until `join`).
+    pub fn submit(&mut self, tasks: impl IntoIterator<Item = TaskDesc>) -> anyhow::Result<u64> {
+        let tx = self
+            .submit_tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("coordinator already joined"))?;
+        let mut n = 0;
+        for t in tasks {
+            tx.send(t).map_err(|_| anyhow::anyhow!("feeder gone"))?;
+            n += 1;
+        }
+        self.submitted.fetch_add(n, Ordering::SeqCst);
+        Ok(n)
+    }
+
+    /// Launch workers and the bulk feeder.
+    pub fn start(&mut self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.phase == Phase::Created, "already started");
+        self.t0 = Instant::now();
+        let results_tx = self.results_tx.take().unwrap();
+        self.pool = Some(WorkerPool::spawn(
+            self.cfg.n_workers,
+            self.cfg.executors_per_worker,
+            self.cfg.engine,
+            self.cfg.exec_time_scale,
+            self.queue.clone(),
+            results_tx,
+            self.t0,
+        ));
+        // Bulk feeder: drains the submission channel into bulks.  The
+        // queue stays open after drain: `join` may still push retries and
+        // closes it once every task has reached a terminal state.
+        let rx = self.submit_rx.take().unwrap();
+        let queue = self.queue.clone();
+        let bulk_size = self.cfg.bulk_size;
+        self.feeder = Some(std::thread::spawn(move || {
+            let mut bulk = Vec::with_capacity(bulk_size);
+            while let Ok(task) = rx.recv() {
+                bulk.push(task);
+                if bulk.len() >= bulk_size {
+                    if queue.push_bulk(std::mem::take(&mut bulk)).is_err() {
+                        return; // canceled
+                    }
+                }
+            }
+            if !bulk.is_empty() {
+                let _ = queue.push_bulk(bulk);
+            }
+        }));
+        self.phase = Phase::Started;
+        Ok(())
+    }
+
+    /// Wait for every submitted task to reach a terminal state; tear the
+    /// overlay down and report.
+    pub fn join(&mut self) -> anyhow::Result<RunReport> {
+        anyhow::ensure!(self.phase == Phase::Started, "not started");
+        // No more submissions: dropping the sender lets the feeder drain.
+        drop(self.submit_tx.take());
+
+        let rx = self.results_rx.take().unwrap();
+        let expected = || self.submitted.load(Ordering::SeqCst);
+        let mut timeline = Timeline::new();
+        let mut results = Vec::new();
+        let (mut done, mut failed, mut canceled) = (0u64, 0u64, 0u64);
+        let mut first_task = f64::INFINITY;
+        let mut received = 0u64;
+        // Retry bookkeeping (failure-management policy): uid -> attempts.
+        let mut attempts: std::collections::HashMap<crate::task::TaskId, u32> =
+            std::collections::HashMap::new();
+        while received < expected() {
+            let r = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break, // all workers gone
+            };
+            // Failed task with retry budget left: resubmit instead of
+            // counting it as terminal.
+            if r.state == TaskState::Failed && self.cfg.max_retries > 0 {
+                if let Some(task) = &r.failed_task {
+                    let n = attempts.entry(r.uid).or_insert(0);
+                    if *n < self.cfg.max_retries {
+                        *n += 1;
+                        log::info!("retrying task {} (attempt {})", r.uid, *n + 1);
+                        if self.queue.push_bulk(vec![(**task).clone()]).is_ok() {
+                            continue; // not terminal yet
+                        }
+                    }
+                }
+            }
+            received += 1;
+            match r.state {
+                TaskState::Done => done += 1,
+                TaskState::Failed => failed += 1,
+                TaskState::Canceled => canceled += 1,
+                s => anyhow::bail!("non-terminal result state {s:?}"),
+            }
+            first_task = first_task.min(r.started);
+            timeline.record(r.started, r.finished, 1.0);
+            if let Some(cb) = &mut self.callback {
+                cb(&r);
+            }
+            if self.cfg.keep_results {
+                results.push(r);
+            }
+        }
+        // Every task is terminal: release the workers.
+        self.queue.close();
+        if let Some(f) = self.feeder.take() {
+            let _ = f.join();
+        }
+        if let Some(p) = self.pool.take() {
+            p.join();
+        }
+        self.phase = Phase::Finished;
+        let wall_s = self.t0.elapsed().as_secs_f64();
+        let util = utilization(&timeline, self.cfg.capacity() as f64, Some(wall_s));
+        let rate = if wall_s > 0.0 {
+            done as f64 / wall_s
+        } else {
+            0.0
+        };
+        Ok(RunReport {
+            done,
+            failed,
+            canceled,
+            wall_s,
+            first_task_s: if first_task.is_finite() { first_task } else { 0.0 },
+            timeline,
+            utilization: util,
+            rate_per_s: rate,
+            results,
+        })
+    }
+
+    /// Cancel outstanding work, then join.
+    pub fn stop(&mut self) -> anyhow::Result<RunReport> {
+        anyhow::ensure!(self.phase == Phase::Started, "not started");
+        drop(self.submit_tx.take());
+        if let Some(p) = &self.pool {
+            p.cancel();
+        }
+        // After cancel, workers drain every queued bulk as Canceled, so
+        // join's accounting still converges.
+        self.join()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if self.phase == Phase::Started {
+            if let Some(p) = &self.pool {
+                p.cancel();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::EngineKind;
+    use crate::task::{DockCall, ExecCall};
+
+    fn fn_task(uid: u64) -> TaskDesc {
+        TaskDesc::function(
+            uid,
+            DockCall {
+                library_seed: 1,
+                protein_seed: 7,
+                first_ligand_id: uid * 8,
+                bundle: 8,
+            },
+        )
+    }
+
+    fn session(n_tasks: u64) -> RunReport {
+        let cfg = RaptorConfig {
+            n_workers: 2,
+            executors_per_worker: 2,
+            bulk_size: 16,
+            engine: EngineKind::Synthetic,
+            keep_results: true,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg).unwrap();
+        c.submit((0..n_tasks).map(fn_task)).unwrap();
+        c.start().unwrap();
+        c.join().unwrap()
+    }
+
+    #[test]
+    fn all_tasks_complete_exactly_once() {
+        let report = session(500);
+        assert_eq!(report.done, 500);
+        assert_eq!(report.failed, 0);
+        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(uids, (0..500).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn submit_after_start_works() {
+        let mut c = Coordinator::new(RaptorConfig {
+            bulk_size: 8,
+            keep_results: true,
+            ..Default::default()
+        })
+        .unwrap();
+        c.submit((0..20).map(fn_task)).unwrap();
+        c.start().unwrap();
+        c.submit((20..40).map(fn_task)).unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 40);
+    }
+
+    #[test]
+    fn callback_sees_every_result() {
+        let mut c = Coordinator::new(RaptorConfig {
+            bulk_size: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let count = Arc::new(AtomicU64::new(0));
+        let c2 = count.clone();
+        c.on_result(Box::new(move |r| {
+            assert_eq!(r.state, TaskState::Done);
+            c2.fetch_add(1, Ordering::SeqCst);
+        }));
+        c.submit((0..37).map(fn_task)).unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 37);
+        assert_eq!(count.load(Ordering::SeqCst), 37);
+    }
+
+    #[test]
+    fn stop_cancels_pending() {
+        let mut c = Coordinator::new(RaptorConfig {
+            n_workers: 1,
+            executors_per_worker: 1,
+            bulk_size: 4,
+            exec_time_scale: 1.0,
+            queue_capacity: 1000,
+            ..Default::default()
+        })
+        .unwrap();
+        // Slow sleep tasks so stop lands mid-run.
+        c.submit((0..100).map(|i| {
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec![],
+                    sim_duration: 0.05,
+                },
+            )
+        }))
+        .unwrap();
+        c.start().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let report = c.stop().unwrap();
+        assert!(report.canceled > 0, "nothing canceled");
+        assert_eq!(report.done + report.failed + report.canceled, 100);
+    }
+
+    #[test]
+    fn empty_run_reports_zero() {
+        let report = session(0);
+        assert_eq!(report.done, 0);
+        assert_eq!(report.rate_per_s, 0.0);
+    }
+
+    #[test]
+    fn mixed_workload_completes() {
+        let cfg = RaptorConfig {
+            n_workers: 2,
+            executors_per_worker: 2,
+            bulk_size: 8,
+            exec_time_scale: 0.0,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg).unwrap();
+        let tasks = (0..60).map(|i| {
+            if i % 2 == 0 {
+                fn_task(i)
+            } else {
+                TaskDesc::executable(
+                    i,
+                    ExecCall {
+                        command: vec![],
+                        sim_duration: 0.01,
+                    },
+                )
+            }
+        });
+        c.submit(tasks).unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 60);
+    }
+}

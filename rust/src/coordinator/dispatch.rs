@@ -1,0 +1,131 @@
+//! Load-balancing / dispatch policies.
+//!
+//! The paper's production configuration is *pull-based*: workers pull
+//! bulks from their coordinator's queue, which self-balances under the
+//! long-tailed docking times ("docking requests cannot be assigned
+//! statically to workers, but need to be dispatched dynamically", §IV-A).
+//! Push policies (round-robin, least-loaded) and the static assignment
+//! baseline (VirtualFlow-like) are implemented for the ablation benches.
+
+use crate::util::rng::SplitMix64;
+
+/// Dispatch policy for assigning the next bulk to a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Workers pull when their local buffer runs low (RAPTOR default).
+    PullBased,
+    /// Coordinator pushes bulks round-robin regardless of load.
+    RoundRobin,
+    /// Coordinator pushes to the worker with the fewest buffered tasks.
+    LeastLoaded,
+    /// Entire workload statically pre-assigned (VirtualFlow-like baseline;
+    /// no dynamic balancing at all).
+    Static,
+}
+
+/// Mutable dispatcher state for the push policies.
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    policy: Policy,
+    rr_next: usize,
+    rng: SplitMix64,
+}
+
+impl Dispatcher {
+    pub fn new(policy: Policy, seed: u64) -> Self {
+        Self {
+            policy,
+            rr_next: 0,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Choose a worker for the next bulk given per-worker buffered task
+    /// counts.  Returns the worker index.  (Pull-based and static modes
+    /// do not call this: pulls are worker-initiated / pre-assigned.)
+    pub fn choose(&mut self, buffered: &[u64]) -> usize {
+        assert!(!buffered.is_empty());
+        match self.policy {
+            Policy::RoundRobin => {
+                let w = self.rr_next % buffered.len();
+                self.rr_next = (self.rr_next + 1) % buffered.len();
+                w
+            }
+            Policy::LeastLoaded => {
+                // Ties broken randomly to avoid herd behaviour.
+                let min = *buffered.iter().min().unwrap();
+                let candidates: Vec<usize> = buffered
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &b)| b == min)
+                    .map(|(i, _)| i)
+                    .collect();
+                candidates[self.rng.next_below(candidates.len() as u64) as usize]
+            }
+            Policy::PullBased | Policy::Static => {
+                unreachable!("{:?} dispatch is not coordinator-initiated", self.policy)
+            }
+        }
+    }
+}
+
+/// Bulk-size selection.  Paper: "they started executing bulks of 128
+/// mixed function and executable tasks" — 128 is the production default;
+/// the ablation sweeps this.
+pub const DEFAULT_BULK: usize = 128;
+
+/// Worker-side refill threshold: pull a new bulk when the local buffer
+/// drops below this fraction of the bulk size (prefetch hides queue
+/// latency — the double-buffering idea at task granularity).
+pub const REFILL_FRACTION: f64 = 0.5;
+
+/// Should a worker with `buffered` tasks and `slots` execution slots pull
+/// another bulk of `bulk` tasks?
+pub fn should_refill(buffered: usize, slots: usize, bulk: usize) -> bool {
+    (buffered as f64) < (bulk as f64 * REFILL_FRACTION).max(slots as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut d = Dispatcher::new(Policy::RoundRobin, 1);
+        let b = vec![0u64; 3];
+        assert_eq!(d.choose(&b), 0);
+        assert_eq!(d.choose(&b), 1);
+        assert_eq!(d.choose(&b), 2);
+        assert_eq!(d.choose(&b), 0);
+    }
+
+    #[test]
+    fn least_loaded_picks_min() {
+        let mut d = Dispatcher::new(Policy::LeastLoaded, 2);
+        assert_eq!(d.choose(&[5, 1, 9]), 1);
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_fairly() {
+        let mut d = Dispatcher::new(Policy::LeastLoaded, 3);
+        let mut hits = [0u32; 2];
+        for _ in 0..1000 {
+            hits[d.choose(&[2, 2, 7])] += 1;
+        }
+        assert!(hits[0] > 300 && hits[1] > 300, "{hits:?}");
+    }
+
+    #[test]
+    fn refill_hysteresis() {
+        // Buffer above threshold: no refill.
+        assert!(!should_refill(100, 4, 128));
+        // Below half-bulk: refill.
+        assert!(should_refill(63, 4, 128));
+        // Never let the buffer fall under the slot count.
+        assert!(should_refill(3, 4, 8));
+    }
+}

@@ -1,0 +1,27 @@
+//! RAPTOR: the coordinator/worker task overlay (the paper's contribution).
+//!
+//! * [`coordinator::Coordinator`] — real-mode coordinator with the paper's
+//!   `submit` / `start` / `join` / `stop` API;
+//! * [`worker::WorkerPool`] — executor slots pulling task bulks, each slot
+//!   owning its PJRT engine;
+//! * [`queue::BulkQueue`] — the bounded bulk MPMC queue (ZeroMQ stand-in)
+//!   and its simulator rate model;
+//! * [`partition::Partition`] — node partitioning across coordinators
+//!   (§III design choice 3);
+//! * [`dispatch`] — pull-based balancing plus push/static policies for
+//!   ablations.
+
+pub mod config;
+#[allow(clippy::module_inception)]
+pub mod coordinator;
+pub mod dispatch;
+pub mod partition;
+pub mod queue;
+pub mod worker;
+
+pub use config::{EngineKind, RaptorConfig};
+pub use coordinator::{Coordinator, ResultCallback, RunReport};
+pub use dispatch::{Policy, DEFAULT_BULK};
+pub use partition::Partition;
+pub use queue::{BulkQueue, QueueModel};
+pub use worker::WorkerPool;

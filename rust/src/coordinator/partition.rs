@@ -1,0 +1,99 @@
+//! Resource partitioning (§III design choice 3): nodes are divided across
+//! a user-defined number of coordinators, each coordinator managing a set
+//! of single-node workers (design choice 4: one worker = at most one
+//! node).
+//!
+//! Experiment 3: 8336 nodes → 8 coordinators × 1041 workers, 8 nodes
+//! reserved for the coordinators themselves.
+
+/// The partition of one pilot's nodes into coordinators and workers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// Nodes reserved to host coordinator processes.
+    pub coordinator_nodes: u32,
+    /// Worker count per coordinator (coordinator i gets `workers[i]`).
+    pub workers: Vec<u32>,
+}
+
+impl Partition {
+    /// Divide `nodes` across `n_coordinators`, reserving `reserve` nodes
+    /// for the coordinator processes themselves.  Remaining nodes are
+    /// spread as evenly as possible (difference ≤ 1).
+    pub fn split(nodes: u32, n_coordinators: u32, reserve: u32) -> Self {
+        assert!(n_coordinators > 0, "need at least one coordinator");
+        assert!(
+            nodes > reserve,
+            "no worker nodes left: {nodes} nodes, {reserve} reserved"
+        );
+        let worker_nodes = nodes - reserve;
+        let base = worker_nodes / n_coordinators;
+        let extra = worker_nodes % n_coordinators;
+        let workers = (0..n_coordinators)
+            .map(|i| base + u32::from(i < extra))
+            .collect();
+        Self {
+            coordinator_nodes: reserve,
+            workers,
+        }
+    }
+
+    /// The experiment-3 layout: 8 coordinators, 8 reserved nodes.
+    pub fn exp3(nodes: u32) -> Self {
+        Self::split(nodes, 8, 8)
+    }
+
+    pub fn n_coordinators(&self) -> u32 {
+        self.workers.len() as u32
+    }
+
+    pub fn total_workers(&self) -> u32 {
+        self.workers.iter().sum()
+    }
+
+    /// Every node is either reserved or hosts exactly one worker.
+    pub fn check(&self, nodes: u32) {
+        assert_eq!(
+            self.coordinator_nodes + self.total_workers(),
+            nodes,
+            "partition must cover all nodes exactly once"
+        );
+        let min = self.workers.iter().min().unwrap();
+        let max = self.workers.iter().max().unwrap();
+        assert!(max - min <= 1, "imbalanced partition: {min}..{max}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp3_layout_matches_paper() {
+        // 8336 nodes, 8 coordinators, 8 reserved -> 8328 workers, 1041 each.
+        let p = Partition::exp3(8336);
+        p.check(8336);
+        assert_eq!(p.n_coordinators(), 8);
+        assert_eq!(p.total_workers(), 8328);
+        assert!(p.workers.iter().all(|&w| w == 1041));
+    }
+
+    #[test]
+    fn uneven_split_differs_by_at_most_one() {
+        let p = Partition::split(100, 7, 2);
+        p.check(100);
+        assert_eq!(p.total_workers(), 98);
+    }
+
+    #[test]
+    fn single_coordinator_gets_everything() {
+        let p = Partition::split(129, 1, 1);
+        p.check(129);
+        assert_eq!(p.workers, vec![128]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no worker nodes left")]
+    fn all_reserved_panics() {
+        Partition::split(4, 2, 4);
+    }
+}

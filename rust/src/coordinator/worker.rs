@@ -1,0 +1,350 @@
+//! Real-mode RAPTOR worker: one (simulated) node's executor pool.
+//!
+//! A worker pulls task *bulks* from its coordinator's queue and fans the
+//! tasks out to its executor slots.  Each executor thread owns its PJRT
+//! engine (the paper's per-worker environment bootstrap — OpenEye venv on
+//! node-local SSD — becomes the per-thread artifact compile here).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::DockEngine;
+use crate::task::{TaskDesc, TaskKind, TaskResult, TaskState};
+use crate::util::rng::SplitMix64;
+
+use super::config::EngineKind;
+use super::queue::BulkQueue;
+
+/// Shared handle the coordinator uses to control its workers.
+pub struct WorkerPool {
+    pub queue: Arc<BulkQueue<TaskDesc>>,
+    pub cancel: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Executors that finished their engine bootstrap.
+    pub ready: Arc<AtomicU64>,
+}
+
+impl WorkerPool {
+    /// Spawn `n_workers * executors_per_worker` executor threads.
+    pub fn spawn(
+        n_workers: u32,
+        executors_per_worker: u32,
+        engine: EngineKind,
+        exec_time_scale: f64,
+        queue: Arc<BulkQueue<TaskDesc>>,
+        results: Sender<TaskResult>,
+        t0: Instant,
+    ) -> Self {
+        let cancel = Arc::new(AtomicBool::new(false));
+        let ready = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for w in 0..n_workers {
+            for e in 0..executors_per_worker {
+                let queue = queue.clone();
+                let results = results.clone();
+                let cancel = cancel.clone();
+                let ready = ready.clone();
+                let name = format!("raptor-w{w}e{e}");
+                let handle = std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || {
+                        executor_loop(
+                            w,
+                            engine,
+                            exec_time_scale,
+                            &queue,
+                            &results,
+                            &cancel,
+                            &ready,
+                            t0,
+                        );
+                    })
+                    .expect("spawning executor thread");
+                handles.push(handle);
+            }
+        }
+        Self {
+            queue,
+            cancel,
+            handles,
+            ready,
+        }
+    }
+
+    /// Request cancellation: in-flight bulks are drained as Canceled.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    /// Join all executor threads (queue must be closed first).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn executor_loop(
+    worker_id: u32,
+    engine_kind: EngineKind,
+    exec_time_scale: f64,
+    queue: &BulkQueue<TaskDesc>,
+    results: &Sender<TaskResult>,
+    cancel: &AtomicBool,
+    ready: &AtomicU64,
+    t0: Instant,
+) {
+    // Per-executor engine bootstrap (PJRT client + artifact compile).
+    let mut engine = match engine_kind {
+        EngineKind::PjrtCpu => match DockEngine::cpu() {
+            Ok(e) => Some(e),
+            Err(err) => {
+                log::error!("worker {worker_id}: engine bootstrap failed: {err:#}");
+                None
+            }
+        },
+        EngineKind::PjrtGpuBundle => match DockEngine::gpu_bundle() {
+            Ok(e) => Some(e),
+            Err(err) => {
+                log::error!("worker {worker_id}: engine bootstrap failed: {err:#}");
+                None
+            }
+        },
+        EngineKind::Synthetic => None,
+    };
+    ready.fetch_add(1, Ordering::SeqCst);
+
+    while let Some(bulk) = queue.pull_bulk() {
+        for task in bulk {
+            let started = t0.elapsed().as_secs_f64();
+            let result = if cancel.load(Ordering::SeqCst) {
+                TaskResult {
+                    uid: task.uid,
+                    state: TaskState::Canceled,
+                    scores: Vec::new(),
+                    started,
+                    finished: t0.elapsed().as_secs_f64(),
+                    worker: worker_id,
+                    failed_task: None,
+                }
+            } else {
+                run_task(&task, engine_kind, engine.as_mut(), exec_time_scale, worker_id, started, t0)
+            };
+            if results.send(result).is_err() {
+                return; // coordinator gone
+            }
+        }
+    }
+}
+
+fn run_task(
+    task: &TaskDesc,
+    engine_kind: EngineKind,
+    engine: Option<&mut DockEngine>,
+    exec_time_scale: f64,
+    worker_id: u32,
+    started: f64,
+    t0: Instant,
+) -> TaskResult {
+    let (state, scores) = match &task.kind {
+        TaskKind::Function(call) => match (engine_kind, engine) {
+            (EngineKind::Synthetic, _) => (TaskState::Done, synthetic_scores(call)),
+            (_, Some(engine)) => match engine.dock(call.library_seed, call.first_ligand_id, call.protein_seed) {
+                Ok(mut scores) => {
+                    // Short trailing bundles: the artifact always scores a
+                    // full bundle; keep only the ligands the call covers.
+                    scores.truncate(call.bundle as usize);
+                    (TaskState::Done, scores)
+                }
+                Err(err) => {
+                    log::warn!("task {}: dock failed: {err:#}", task.uid);
+                    (TaskState::Failed, Vec::new())
+                }
+            },
+            (_, None) => (TaskState::Failed, Vec::new()),
+        },
+        TaskKind::Executable(call) => {
+            if call.command.is_empty() {
+                // Synthetic executable: sleep for the (scaled) duration.
+                let dur = call.sim_duration * exec_time_scale;
+                if dur > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(dur.min(10.0)));
+                }
+                (TaskState::Done, Vec::new())
+            } else {
+                match std::process::Command::new(&call.command[0])
+                    .args(&call.command[1..])
+                    .stdout(std::process::Stdio::null())
+                    .stderr(std::process::Stdio::null())
+                    .status()
+                {
+                    Ok(s) if s.success() => (TaskState::Done, Vec::new()),
+                    Ok(_) => (TaskState::Failed, Vec::new()),
+                    Err(err) => {
+                        log::warn!("task {}: spawn failed: {err}", task.uid);
+                        (TaskState::Failed, Vec::new())
+                    }
+                }
+            }
+        }
+    };
+    TaskResult {
+        uid: task.uid,
+        state,
+        scores,
+        started,
+        finished: t0.elapsed().as_secs_f64(),
+        worker: worker_id,
+        failed_task: if state == TaskState::Failed {
+            Some(Box::new(task.clone()))
+        } else {
+            None
+        },
+    }
+}
+
+/// Deterministic fake scores for EngineKind::Synthetic (tests).
+pub fn synthetic_scores(call: &crate::task::DockCall) -> Vec<f32> {
+    let mut rng = SplitMix64::new(
+        call.library_seed ^ call.protein_seed ^ call.first_ligand_id.wrapping_mul(0x9E37),
+    );
+    (0..call.bundle).map(|_| -rng.next_unit_f32() * 10.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::DockCall;
+    use std::sync::mpsc::channel;
+
+    fn call(first: u64, bundle: u32) -> DockCall {
+        DockCall {
+            library_seed: 1,
+            protein_seed: 2,
+            first_ligand_id: first,
+            bundle,
+        }
+    }
+
+    #[test]
+    fn synthetic_pool_completes_all_tasks() {
+        let queue = Arc::new(BulkQueue::new(4));
+        let (tx, rx) = channel();
+        let pool = WorkerPool::spawn(
+            2,
+            2,
+            EngineKind::Synthetic,
+            0.0,
+            queue.clone(),
+            tx,
+            Instant::now(),
+        );
+        for b in 0..10u64 {
+            let bulk: Vec<TaskDesc> = (0..16)
+                .map(|i| TaskDesc::function(b * 16 + i, call((b * 16 + i) * 8, 8)))
+                .collect();
+            queue.push_bulk(bulk).unwrap();
+        }
+        queue.close();
+        let mut got = Vec::new();
+        for _ in 0..160 {
+            got.push(rx.recv().unwrap());
+        }
+        pool.join();
+        assert_eq!(got.len(), 160);
+        assert!(got.iter().all(|r| r.state == TaskState::Done));
+        assert!(got.iter().all(|r| r.scores.len() == 8));
+        let mut uids: Vec<u64> = got.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(uids, (0..160).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn executable_task_runs_real_process() {
+        let queue = Arc::new(BulkQueue::new(2));
+        let (tx, rx) = channel();
+        let pool = WorkerPool::spawn(
+            1,
+            1,
+            EngineKind::Synthetic,
+            0.0,
+            queue.clone(),
+            tx,
+            Instant::now(),
+        );
+        let ok = TaskDesc::executable(
+            1,
+            crate::task::ExecCall {
+                command: vec!["true".into()],
+                sim_duration: 0.0,
+            },
+        );
+        let bad = TaskDesc::executable(
+            2,
+            crate::task::ExecCall {
+                command: vec!["false".into()],
+                sim_duration: 0.0,
+            },
+        );
+        queue.push_bulk(vec![ok, bad]).unwrap();
+        queue.close();
+        let r1 = rx.recv().unwrap();
+        let r2 = rx.recv().unwrap();
+        pool.join();
+        assert_eq!(r1.state, TaskState::Done);
+        assert_eq!(r2.state, TaskState::Failed);
+    }
+
+    #[test]
+    fn cancel_drains_as_canceled() {
+        let queue = Arc::new(BulkQueue::new(64));
+        let (tx, rx) = channel();
+        let pool = WorkerPool::spawn(
+            1,
+            1,
+            EngineKind::Synthetic,
+            1.0,
+            queue.clone(),
+            tx,
+            Instant::now(),
+        );
+        // One slow sleep task then many pending.
+        let mut bulk = vec![TaskDesc::executable(
+            0,
+            crate::task::ExecCall {
+                command: vec![],
+                sim_duration: 0.2,
+            },
+        )];
+        for i in 1..50 {
+            bulk.push(TaskDesc::function(i, call(i * 8, 8)));
+        }
+        queue.push_bulk(bulk).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        pool.cancel();
+        let mut done = 0;
+        let mut canceled = 0;
+        for _ in 0..50 {
+            match rx.recv().unwrap().state {
+                TaskState::Canceled => canceled += 1,
+                _ => done += 1,
+            }
+        }
+        pool.join();
+        assert!(canceled > 0, "cancel had no effect");
+        assert!(done >= 1);
+        assert_eq!(done + canceled, 50);
+    }
+
+    #[test]
+    fn synthetic_scores_deterministic() {
+        let a = synthetic_scores(&call(5, 8));
+        let b = synthetic_scores(&call(5, 8));
+        assert_eq!(a, b);
+        assert_ne!(a, synthetic_scores(&call(6, 8)));
+    }
+}

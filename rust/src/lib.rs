@@ -1,0 +1,30 @@
+//! # RAPTOR: Ravenous Throughput Computing
+//!
+//! A reproduction of the RADICAL-Pilot task overlay (RAPTOR; Merzky,
+//! Turilli, Jha — CCGrid 2022): a coordinator/worker framework for
+//! executing heterogeneous function and executable tasks on HPC platforms
+//! at high throughput (144M docks/hour on 7,600 Frontera nodes) and >90%
+//! steady-state resource utilization.
+//!
+//! The crate is a three-layer stack:
+//! * **L3 (this crate)** — the RAPTOR coordinator/worker overlay, the
+//!   RADICAL-Pilot substrate it extends, the HPC platform simulator, and
+//!   the experiment harness.
+//! * **L2 (python/compile, build-time)** — the docking-surrogate compute
+//!   graphs in JAX, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels, build-time)** — the Pallas docking
+//!   kernel that L2 calls.
+//!
+//! Python never runs on the request path: workers execute the AOT
+//! artifacts via PJRT (`runtime`).
+pub mod baseline;
+pub mod campaign;
+pub mod coordinator;
+pub mod metrics;
+pub mod pilot;
+pub mod platform;
+pub mod runtime;
+pub mod sim;
+pub mod task;
+pub mod util;
+pub mod workload;

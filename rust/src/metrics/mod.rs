@@ -1,0 +1,13 @@
+//! Metrics: concurrency timelines, utilization accounting (paper §IV's
+//! avg/steady definition), and report/CSV generation for Table I and the
+//! figures.
+
+pub mod report;
+pub mod stream;
+pub mod timeline;
+pub mod utilization;
+
+pub use report::{print_comparison, Table1Row};
+pub use stream::{StreamMetrics, TaskClass};
+pub use timeline::Timeline;
+pub use utilization::{utilization, Utilization};

@@ -1,0 +1,258 @@
+//! Experiment reports: Table-I rows, figure CSVs, paper-vs-measured
+//! comparison printing.
+
+use std::path::Path;
+
+use crate::util::json::{arr_f64, obj, Json};
+use crate::util::stats::{Histogram, Series};
+
+/// One row of Table I (paper values or measured values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table1Row {
+    pub id: u32,
+    pub platform: String,
+    pub application: String,
+    pub nodes: u32,
+    pub pilots: u32,
+    /// Total tasks (millions).
+    pub tasks_m: f64,
+    pub startup_s: f64,
+    pub first_task_s: f64,
+    pub util_avg: f64,
+    pub util_steady: f64,
+    pub task_time_max_s: f64,
+    pub task_time_mean_s: f64,
+    /// Rates in 1e6 docks/h.
+    pub rate_max_mh: f64,
+    pub rate_mean_mh: f64,
+}
+
+impl Table1Row {
+    /// The paper's Table I (ground truth for comparison output).
+    pub fn paper() -> Vec<Table1Row> {
+        vec![
+            Table1Row {
+                id: 1,
+                platform: "Frontera".into(),
+                application: "OpenEye".into(),
+                nodes: 128,
+                pilots: 31,
+                tasks_m: 205.0,
+                startup_s: 129.0,
+                first_task_s: 125.0,
+                util_avg: 0.90,
+                util_steady: 0.93,
+                task_time_max_s: 3582.6,
+                task_time_mean_s: 28.8,
+                rate_max_mh: 17.4,
+                rate_mean_mh: 5.0,
+            },
+            Table1Row {
+                id: 2,
+                platform: "Frontera".into(),
+                application: "OpenEye".into(),
+                nodes: 7600,
+                pilots: 1,
+                tasks_m: 126.0,
+                startup_s: 81.0,
+                first_task_s: 140.0,
+                util_avg: 0.90,
+                util_steady: 0.98,
+                task_time_max_s: 14958.8,
+                task_time_mean_s: 10.1,
+                rate_max_mh: 144.0,
+                rate_mean_mh: 126.0,
+            },
+            Table1Row {
+                id: 3,
+                platform: "Frontera".into(),
+                application: "OpenEye".into(),
+                nodes: 8336,
+                pilots: 1,
+                tasks_m: 13.0,
+                startup_s: 451.0,
+                first_task_s: 142.0,
+                util_avg: 0.63,
+                util_steady: 0.98,
+                task_time_max_s: 219.0,
+                task_time_mean_s: 25.3,
+                rate_max_mh: 91.8,
+                rate_mean_mh: 11.0,
+            },
+            Table1Row {
+                id: 4,
+                platform: "Summit".into(),
+                application: "AutoDock".into(),
+                nodes: 1000,
+                pilots: 1,
+                tasks_m: 57.0,
+                startup_s: 107.0,
+                first_task_s: 220.0,
+                util_avg: 0.95,
+                util_steady: 0.95,
+                task_time_max_s: 263.9,
+                task_time_mean_s: 36.2,
+                rate_max_mh: 11.3,
+                rate_mean_mh: 11.1,
+            },
+        ]
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<4} {:<9} {:<9} {:>6} {:>7} {:>9} {:>8} {:>9} {:>13} {:>9} {:>9} {:>8} {:>8}",
+            "ID",
+            "Platform",
+            "App",
+            "Nodes",
+            "Pilots",
+            "Tasks[M]",
+            "Startup",
+            "1stTask",
+            "Util avg/std",
+            "Tmax[s]",
+            "Tmean[s]",
+            "Rmax",
+            "Rmean"
+        )
+    }
+
+    pub fn format(&self) -> String {
+        format!(
+            "{:<4} {:<9} {:<9} {:>6} {:>7} {:>9.1} {:>8.0} {:>9.0} {:>6.0}%/{:>4.0}% {:>9.1} {:>9.1} {:>8.1} {:>8.1}",
+            self.id,
+            self.platform,
+            self.application,
+            self.nodes,
+            self.pilots,
+            self.tasks_m,
+            self.startup_s,
+            self.first_task_s,
+            self.util_avg * 100.0,
+            self.util_steady * 100.0,
+            self.task_time_max_s,
+            self.task_time_mean_s,
+            self.rate_max_mh,
+            self.rate_mean_mh
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("platform", Json::Str(self.platform.clone())),
+            ("application", Json::Str(self.application.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("pilots", Json::Num(self.pilots as f64)),
+            ("tasks_m", Json::Num(self.tasks_m)),
+            ("startup_s", Json::Num(self.startup_s)),
+            ("first_task_s", Json::Num(self.first_task_s)),
+            ("util_avg", Json::Num(self.util_avg)),
+            ("util_steady", Json::Num(self.util_steady)),
+            ("task_time_max_s", Json::Num(self.task_time_max_s)),
+            ("task_time_mean_s", Json::Num(self.task_time_mean_s)),
+            ("rate_max_mh", Json::Num(self.rate_max_mh)),
+            ("rate_mean_mh", Json::Num(self.rate_mean_mh)),
+        ])
+    }
+}
+
+/// Print a paper-vs-measured pair with per-column agreement markers.
+pub fn print_comparison(paper: &Table1Row, measured: &Table1Row) {
+    println!("{}", Table1Row::header());
+    println!("{}   <- paper", paper.format());
+    println!("{}   <- measured", measured.format());
+    let ratio = |a: f64, b: f64| -> f64 {
+        if a == 0.0 && b == 0.0 {
+            1.0
+        } else if a == 0.0 {
+            f64::INFINITY
+        } else {
+            b / a
+        }
+    };
+    println!(
+        "     agreement: startup x{:.2}  util_steady x{:.2}  rate_max x{:.2}  rate_mean x{:.2}",
+        ratio(paper.startup_s, measured.startup_s),
+        ratio(paper.util_steady, measured.util_steady),
+        ratio(paper.rate_max_mh, measured.rate_max_mh),
+        ratio(paper.rate_mean_mh, measured.rate_mean_mh),
+    );
+}
+
+/// Write a histogram as a two-column CSV (the figure-data format).
+pub fn write_histogram_csv(
+    path: impl AsRef<Path>,
+    h: &Histogram,
+    xlabel: &str,
+) -> anyhow::Result<()> {
+    let mut s = format!("{xlabel},count\n");
+    for (c, n) in h.centers().iter().zip(h.bins()) {
+        s.push_str(&format!("{c},{n}\n"));
+    }
+    crate::util::write_file(path, &s)
+}
+
+/// Write a series as CSV.
+pub fn write_series_csv(
+    path: impl AsRef<Path>,
+    s: &Series,
+    headers: (&str, &str),
+) -> anyhow::Result<()> {
+    crate::util::write_file(path, &s.to_csv(headers))
+}
+
+/// Write any JSON report.
+pub fn write_json(path: impl AsRef<Path>, v: &Json) -> anyhow::Result<()> {
+    crate::util::write_file(path, &v.to_string())
+}
+
+/// Figure payload bundling series + metadata (for results/*.json).
+pub fn figure_json(name: &str, xs: &[f64], ys: &[f64]) -> Json {
+    obj(vec![
+        ("figure", Json::Str(name.into())),
+        ("x", arr_f64(xs)),
+        ("y", arr_f64(ys)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_has_four_rows() {
+        let rows = Table1Row::paper();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[1].rate_max_mh, 144.0);
+        assert_eq!(rows[2].nodes, 8336);
+        assert_eq!(rows[3].platform, "Summit");
+    }
+
+    #[test]
+    fn format_contains_key_numbers() {
+        let r = &Table1Row::paper()[1];
+        let s = r.format();
+        assert!(s.contains("144.0"));
+        assert!(s.contains("7600"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = &Table1Row::paper()[0];
+        let j = r.to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.num_field("rate_max_mh").unwrap(), 17.4);
+    }
+
+    #[test]
+    fn csv_writers_produce_rows() {
+        let dir = std::env::temp_dir().join("raptor_report_test");
+        let mut h = crate::util::stats::Histogram::new(0.0, 10.0, 5);
+        h.push(1.0);
+        write_histogram_csv(dir.join("h.csv"), &h, "secs").unwrap();
+        let text = std::fs::read_to_string(dir.join("h.csv")).unwrap();
+        assert!(text.starts_with("secs,count\n"));
+        assert_eq!(text.lines().count(), 6);
+    }
+}

@@ -1,0 +1,279 @@
+//! Streaming (O(windows)) metrics for paper-scale simulations.
+//!
+//! Experiment 2 completes 126M tasks; storing per-task records would cost
+//! gigabytes.  `StreamMetrics` folds starts/finishes into windowed rate
+//! counts, a step-sampled concurrency series, duration accumulators and
+//! histograms as events arrive.
+
+use crate::util::stats::{Accum, Histogram, Series};
+
+/// Task species tracked separately (experiment 3 reports function and
+/// executable completion rates side by side — Fig 8a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskClass {
+    Function,
+    Executable,
+}
+
+/// Streaming metrics collector.
+#[derive(Debug, Clone)]
+pub struct StreamMetrics {
+    dt: f64,
+    /// Completion counts per window, per class.
+    fn_counts: Vec<u64>,
+    ex_counts: Vec<u64>,
+    /// Weighted concurrency integral per window (for utilization) and
+    /// current level; sampled as a step function.
+    conc_area: Vec<f64>,
+    level: f64,
+    last_t: f64,
+    peak_conc: f64,
+    /// Duration stats (seconds), per class.
+    pub fn_durations: Accum,
+    pub ex_durations: Accum,
+    pub fn_hist: Histogram,
+    pub ex_hist: Histogram,
+    first_start: f64,
+    last_finish: f64,
+}
+
+impl StreamMetrics {
+    /// `dt`: window width (s); `hist_max`: histogram range for durations.
+    pub fn new(dt: f64, hist_max: f64, hist_bins: usize) -> Self {
+        Self {
+            dt,
+            fn_counts: Vec::new(),
+            ex_counts: Vec::new(),
+            conc_area: Vec::new(),
+            level: 0.0,
+            last_t: 0.0,
+            peak_conc: 0.0,
+            fn_durations: Accum::new(),
+            ex_durations: Accum::new(),
+            fn_hist: Histogram::new(0.0, hist_max, hist_bins),
+            ex_hist: Histogram::new(0.0, hist_max, hist_bins),
+            first_start: f64::INFINITY,
+            last_finish: 0.0,
+        }
+    }
+
+    fn window(&mut self, t: f64) -> usize {
+        let w = (t / self.dt) as usize;
+        if w >= self.fn_counts.len() {
+            self.fn_counts.resize(w + 1, 0);
+            self.ex_counts.resize(w + 1, 0);
+            self.conc_area.resize(w + 1, 0.0);
+        }
+        w
+    }
+
+    /// Advance the concurrency integral to time `t`.
+    fn integrate_to(&mut self, t: f64) {
+        debug_assert!(t + 1e-9 >= self.last_t, "time went backwards");
+        let t = t.max(self.last_t);
+        let mut cur = self.last_t;
+        while cur < t {
+            let w = self.window(cur);
+            let w_end = (w as f64 + 1.0) * self.dt;
+            let seg = (t.min(w_end) - cur).max(0.0);
+            self.conc_area[w] += self.level * seg;
+            cur = if w_end <= cur { cur + self.dt } else { w_end.min(t) };
+        }
+        self.last_t = t;
+    }
+
+    /// A task starts at `t`, occupying `cores` units.
+    pub fn start(&mut self, t: f64, cores: f64) {
+        self.integrate_to(t);
+        self.level += cores;
+        self.peak_conc = self.peak_conc.max(self.level);
+        self.first_start = self.first_start.min(t);
+    }
+
+    /// A task finishes at `t` after `duration` seconds on `cores` units.
+    pub fn finish(&mut self, t: f64, duration: f64, cores: f64, class: TaskClass) {
+        self.integrate_to(t);
+        self.level = (self.level - cores).max(0.0);
+        let w = self.window(t);
+        match class {
+            TaskClass::Function => {
+                self.fn_counts[w] += 1;
+                self.fn_durations.push(duration);
+                self.fn_hist.push(duration);
+            }
+            TaskClass::Executable => {
+                self.ex_counts[w] += 1;
+                self.ex_durations.push(duration);
+                self.ex_hist.push(duration);
+            }
+        }
+        self.last_finish = self.last_finish.max(t);
+    }
+
+    pub fn total_finished(&self) -> u64 {
+        self.fn_durations.count() + self.ex_durations.count()
+    }
+
+    pub fn first_start_time(&self) -> f64 {
+        self.first_start
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.last_finish
+    }
+
+    pub fn peak_concurrency(&self) -> f64 {
+        self.peak_conc
+    }
+
+    /// Completion-rate series (tasks/s) for a class, or both when `None`.
+    pub fn rate_series(&self, class: Option<TaskClass>) -> Series {
+        let mut s = Series::new();
+        for w in 0..self.fn_counts.len() {
+            let n = match class {
+                Some(TaskClass::Function) => self.fn_counts[w],
+                Some(TaskClass::Executable) => self.ex_counts[w],
+                None => self.fn_counts[w] + self.ex_counts[w],
+            };
+            s.push((w as f64 + 0.5) * self.dt, n as f64 / self.dt);
+        }
+        s
+    }
+
+    /// Mean concurrency per window as a series.
+    pub fn concurrency_series(&self) -> Series {
+        let mut s = Series::new();
+        for (w, area) in self.conc_area.iter().enumerate() {
+            s.push((w as f64 + 0.5) * self.dt, area / self.dt);
+        }
+        s
+    }
+
+    /// Peak completion rate (tasks/s) over all windows, both classes.
+    pub fn peak_rate(&self) -> f64 {
+        (0..self.fn_counts.len())
+            .map(|w| (self.fn_counts[w] + self.ex_counts[w]) as f64 / self.dt)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean completion rate over [first_start, makespan].
+    pub fn mean_rate(&self) -> f64 {
+        let span = self.makespan() - 0.0;
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.total_finished() as f64 / span
+    }
+
+    /// Utilization vs `capacity` over [0, end]: (avg, steady, window).
+    /// Steady window: concurrency ≥ `frac` × peak.
+    pub fn utilization(&self, capacity: f64, end: f64, frac: f64) -> crate::metrics::Utilization {
+        let conc = self.concurrency_series();
+        let avg = conc.mean_over(0.0, end) / capacity;
+        let thresh = self.peak_conc * frac;
+        let mut from = 0.0;
+        let mut to = 0.0;
+        let mut seen = false;
+        for &(t, v) in &conc.points {
+            if v >= thresh {
+                if !seen {
+                    from = t;
+                    seen = true;
+                }
+                to = t;
+            }
+        }
+        let steady = if to > from {
+            conc.mean_over(from, to) / capacity
+        } else {
+            avg
+        };
+        crate::metrics::Utilization {
+            avg: avg.clamp(0.0, 1.0),
+            steady: steady.clamp(0.0, 1.0),
+            steady_from: from,
+            steady_to: to,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_rates() {
+        let mut m = StreamMetrics::new(10.0, 100.0, 10);
+        for i in 0..100 {
+            let s = (i % 10) as f64;
+            m.start(s, 1.0);
+        }
+        for i in 0..100 {
+            let f = 50.0 + (i % 10) as f64;
+            m.finish(f, 50.0, 1.0, TaskClass::Function);
+        }
+        assert_eq!(m.total_finished(), 100);
+        assert_eq!(m.fn_durations.count(), 100);
+        let total: f64 = m
+            .rate_series(None)
+            .points
+            .iter()
+            .map(|&(_, v)| v * 10.0)
+            .sum();
+        assert!((total - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrency_integral_matches_manual() {
+        let mut m = StreamMetrics::new(1.0, 10.0, 10);
+        m.start(0.0, 2.0);
+        m.finish(4.0, 4.0, 2.0, TaskClass::Function);
+        // level 2 over [0,4): windows 0..4 get area 2 each.
+        let c = m.concurrency_series();
+        assert!((c.points[0].1 - 2.0).abs() < 1e-9);
+        assert!((c.points[3].1 - 2.0).abs() < 1e-9);
+        assert_eq!(m.peak_concurrency(), 2.0);
+    }
+
+    #[test]
+    fn classes_tracked_separately() {
+        let mut m = StreamMetrics::new(1.0, 10.0, 10);
+        m.start(0.0, 1.0);
+        m.start(0.0, 1.0);
+        m.finish(1.0, 1.0, 1.0, TaskClass::Function);
+        m.finish(2.0, 2.0, 1.0, TaskClass::Executable);
+        assert_eq!(m.fn_durations.count(), 1);
+        assert_eq!(m.ex_durations.count(), 1);
+        let fn_total: f64 = m
+            .rate_series(Some(TaskClass::Function))
+            .points
+            .iter()
+            .map(|&(_, v)| v)
+            .sum();
+        assert!((fn_total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_full_busy() {
+        let mut m = StreamMetrics::new(1.0, 10.0, 10);
+        for _ in 0..4 {
+            m.start(0.0, 1.0);
+        }
+        for _ in 0..4 {
+            m.finish(100.0, 100.0, 1.0, TaskClass::Function);
+        }
+        let u = m.utilization(4.0, 100.0, 0.9);
+        assert!(u.avg > 0.98, "avg {}", u.avg);
+        assert!(u.steady > 0.98);
+    }
+
+    #[test]
+    fn out_of_order_same_window_tolerated() {
+        let mut m = StreamMetrics::new(10.0, 10.0, 4);
+        m.start(5.0, 1.0);
+        m.start(5.0, 1.0);
+        m.finish(7.0, 2.0, 1.0, TaskClass::Function);
+        m.finish(7.5, 2.5, 1.0, TaskClass::Function);
+        assert_eq!(m.total_finished(), 2);
+    }
+}

@@ -1,0 +1,200 @@
+//! Task-concurrency timelines and completion-rate series.
+//!
+//! Everything Table I and Figs 5/6b/6c/8/9b report is derived from the
+//! stream of (start, finish) task events: concurrency over time, windowed
+//! completion rates, and the startup / steady-state / cooldown phases the
+//! paper's utilization metric needs.
+
+use crate::util::stats::Series;
+
+/// Collects task start/finish events (in seconds since run start) and
+/// derives concurrency and rate series.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    /// (+t) for each task start.
+    starts: Vec<f64>,
+    /// (t, cores) for each task finish (cores freed).
+    finishes: Vec<(f64, f64)>,
+    /// Cores per task (weights the concurrency by resource footprint).
+    weights: Vec<f64>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed task occupying `cores` from `start` to `finish`.
+    pub fn record(&mut self, start: f64, finish: f64, cores: f64) {
+        debug_assert!(finish >= start, "task finished before start");
+        self.starts.push(start);
+        self.finishes.push((finish, cores));
+        self.weights.push(cores);
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Latest finish time (run makespan).
+    pub fn makespan(&self) -> f64 {
+        self.finishes
+            .iter()
+            .map(|&(t, _)| t)
+            .fold(0.0, f64::max)
+    }
+
+    /// Earliest task start ("1st task" column of Table I when offset by
+    /// the pilot start).
+    pub fn first_start(&self) -> f64 {
+        self.starts.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Weighted concurrency as a step series sampled every `dt` seconds.
+    pub fn concurrency(&self, dt: f64) -> Series {
+        let mut events: Vec<(f64, f64)> = Vec::with_capacity(self.starts.len() * 2);
+        for (i, &s) in self.starts.iter().enumerate() {
+            events.push((s, self.weights[i]));
+        }
+        for &(f, w) in &self.finishes {
+            events.push((f, -w));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut series = Series::new();
+        let mut level = 0.0;
+        let mut next_sample = 0.0;
+        for (t, delta) in events {
+            while next_sample < t {
+                series.push(next_sample, level);
+                next_sample += dt;
+            }
+            level += delta;
+        }
+        series.push(next_sample, level.max(0.0));
+        series
+    }
+
+    /// Completion rate (tasks/s) in windows of `dt` seconds.
+    pub fn completion_rate(&self, dt: f64) -> Series {
+        let mut finishes: Vec<f64> = self.finishes.iter().map(|&(t, _)| t).collect();
+        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut series = Series::new();
+        if finishes.is_empty() {
+            return series;
+        }
+        let end = *finishes.last().unwrap();
+        let mut idx = 0;
+        let mut t = 0.0;
+        while t <= end {
+            let hi = t + dt;
+            let mut count = 0u64;
+            while idx < finishes.len() && finishes[idx] < hi {
+                count += 1;
+                idx += 1;
+            }
+            series.push(t + dt / 2.0, count as f64 / dt);
+            t = hi;
+        }
+        series
+    }
+
+    /// Detect (startup_end, cooldown_start) via the paper's definition:
+    /// startup = "time where the concurrency of tasks rises", cooldown =
+    /// "where the concurrency decreases".  Implemented as first/last time
+    /// the concurrency is within `frac` of its peak.
+    pub fn steady_window(&self, dt: f64, frac: f64) -> (f64, f64) {
+        let c = self.concurrency(dt);
+        let peak = c.points.iter().map(|&(_, v)| v).fold(0.0, f64::max);
+        if peak == 0.0 {
+            return (0.0, 0.0);
+        }
+        let thresh = peak * frac;
+        let mut first = 0.0;
+        let mut last = 0.0;
+        let mut seen = false;
+        for &(t, v) in &c.points {
+            if v >= thresh {
+                if !seen {
+                    first = t;
+                    seen = true;
+                }
+                last = t;
+            }
+        }
+        (first, last.max(first))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square_wave() -> Timeline {
+        // 100 tasks of 10 s each, 10 concurrent, back to back.
+        let mut tl = Timeline::new();
+        for wave in 0..10 {
+            for _ in 0..10 {
+                let s = wave as f64 * 10.0;
+                tl.record(s, s + 10.0, 1.0);
+            }
+        }
+        tl
+    }
+
+    #[test]
+    fn concurrency_plateau() {
+        let tl = square_wave();
+        let c = tl.concurrency(1.0);
+        let mid = c
+            .points
+            .iter()
+            .filter(|&&(t, _)| (10.0..90.0).contains(&t))
+            .map(|&(_, v)| v)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(mid, 10.0);
+        assert_eq!(tl.makespan(), 100.0);
+        assert_eq!(tl.n_tasks(), 100);
+    }
+
+    #[test]
+    fn completion_rate_counts_all() {
+        let tl = square_wave();
+        let r = tl.completion_rate(10.0);
+        let total: f64 = r.points.iter().map(|&(_, v)| v * 10.0).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steady_window_excludes_ramp() {
+        // Ramp: task i starts at i*1.0, all finish at 100.
+        let mut tl = Timeline::new();
+        for i in 0..50 {
+            tl.record(i as f64, 100.0, 1.0);
+        }
+        let (a, b) = tl.steady_window(1.0, 0.95);
+        assert!(a >= 45.0, "steady start {a} should be after the ramp");
+        assert!(b > a);
+    }
+
+    #[test]
+    fn weighted_concurrency() {
+        let mut tl = Timeline::new();
+        tl.record(0.0, 10.0, 4.0); // a 4-core task
+        let c = tl.concurrency(1.0);
+        let at5 = c
+            .points
+            .iter()
+            .find(|&&(t, _)| (t - 5.0).abs() < 0.5)
+            .unwrap()
+            .1;
+        assert_eq!(at5, 4.0);
+    }
+
+    #[test]
+    fn empty_timeline_is_sane() {
+        let tl = Timeline::new();
+        assert_eq!(tl.makespan(), 0.0);
+        assert_eq!(tl.steady_window(1.0, 0.9), (0.0, 0.0));
+        assert!(tl.completion_rate(1.0).points.is_empty());
+    }
+}

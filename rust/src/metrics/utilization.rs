@@ -1,0 +1,101 @@
+//! Resource-utilization accounting (Table I's `avg / steady` columns).
+//!
+//! "Resource utilization measures the percentage of available CPU and/or
+//! GPUs used for docking operations. [...] avg for the average utilization
+//! over the pilot runtime, and steady for the steady-state utilization"
+//! (§IV).  Startup and cooldown are excluded from the steady value.
+
+use super::timeline::Timeline;
+
+/// Utilization report for one pilot/run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    /// Average over the whole pilot runtime [0, makespan].
+    pub avg: f64,
+    /// Average over the steady-state window (startup/cooldown removed).
+    pub steady: f64,
+    /// The detected steady window.
+    pub steady_from: f64,
+    pub steady_to: f64,
+}
+
+/// Compute utilization from a task timeline against `capacity` busy-able
+/// units (cores or GPUs) available from t=0 to the pilot end.
+///
+/// `pilot_end` defaults to the makespan; passing the real pilot duration
+/// (e.g. the 1200 s window of experiment 3) accounts for trailing idle.
+pub fn utilization(tl: &Timeline, capacity: f64, pilot_end: Option<f64>) -> Utilization {
+    assert!(capacity > 0.0);
+    let end = pilot_end.unwrap_or_else(|| tl.makespan());
+    if end <= 0.0 {
+        return Utilization {
+            avg: 0.0,
+            steady: 0.0,
+            steady_from: 0.0,
+            steady_to: 0.0,
+        };
+    }
+    let dt = (end / 2000.0).max(0.1);
+    let conc = tl.concurrency(dt);
+    let avg = conc.mean_over(0.0, end) / capacity;
+    let (a, b) = tl.steady_window(dt, 0.90);
+    let steady = if b > a {
+        conc.mean_over(a, b) / capacity
+    } else {
+        avg
+    };
+    Utilization {
+        avg: avg.clamp(0.0, 1.0),
+        steady: steady.clamp(0.0, 1.0),
+        steady_from: a,
+        steady_to: b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_busy_is_one() {
+        let mut tl = Timeline::new();
+        for c in 0..8 {
+            let _ = c;
+            tl.record(0.0, 100.0, 1.0);
+        }
+        let u = utilization(&tl, 8.0, None);
+        assert!(u.avg > 0.99, "avg {}", u.avg);
+        assert!(u.steady > 0.99);
+    }
+
+    #[test]
+    fn startup_cooldown_lower_avg_not_steady() {
+        // Trapezoid: ramp 0..100, plateau 100..900 at 100 tasks, decay to 1000.
+        let mut tl = Timeline::new();
+        for i in 0..100 {
+            // Task i starts at i, finishes at 900 + i (long tail).
+            tl.record(i as f64, 900.0 + i as f64, 1.0);
+        }
+        let u = utilization(&tl, 100.0, None);
+        assert!(u.steady > 0.97, "steady {}", u.steady);
+        assert!(u.avg < u.steady, "avg {} !< steady {}", u.avg, u.steady);
+        assert!(u.avg > 0.8);
+    }
+
+    #[test]
+    fn trailing_idle_counts_against_avg() {
+        let mut tl = Timeline::new();
+        tl.record(0.0, 50.0, 1.0);
+        let u_short = utilization(&tl, 1.0, Some(50.0));
+        let u_long = utilization(&tl, 1.0, Some(100.0));
+        assert!(u_long.avg < u_short.avg);
+    }
+
+    #[test]
+    fn clamped_to_unit_interval() {
+        let mut tl = Timeline::new();
+        tl.record(0.0, 10.0, 5.0); // oversubscribed vs capacity 1
+        let u = utilization(&tl, 1.0, None);
+        assert!(u.avg <= 1.0 && u.steady <= 1.0);
+    }
+}

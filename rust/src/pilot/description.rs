@@ -1,0 +1,127 @@
+//! Pilot descriptions: what the RP API submits to a platform's batch
+//! system (resource request + queue + walltime).
+
+use crate::platform::{PlatformSpec, QueuePolicy};
+
+/// A pilot: one batch job's worth of resources managed by RP.
+#[derive(Debug, Clone)]
+pub struct PilotDescription {
+    /// Nodes requested.
+    pub nodes: u32,
+    /// Requested walltime (seconds).
+    pub walltime_s: f64,
+    /// Stage inputs to node-local SSDs (exp-2 optimization).  Governs the
+    /// usable-cores-per-node cap and per-task read overheads (see
+    /// `platform::fs`).
+    pub local_staging: bool,
+    /// Cores per node to actually use (None = as many as the FS allows).
+    pub cores_override: Option<u32>,
+    /// Use GPUs instead of cores as execution slots (exp 4).
+    pub use_gpus: bool,
+}
+
+impl PilotDescription {
+    pub fn new(nodes: u32, walltime_s: f64) -> Self {
+        Self {
+            nodes,
+            walltime_s,
+            local_staging: false,
+            cores_override: None,
+            use_gpus: false,
+        }
+    }
+
+    pub fn with_local_staging(mut self) -> Self {
+        self.local_staging = true;
+        self
+    }
+
+    pub fn with_cores(mut self, cores: u32) -> Self {
+        self.cores_override = Some(cores);
+        self
+    }
+
+    pub fn with_gpus(mut self) -> Self {
+        self.use_gpus = true;
+        self
+    }
+
+    /// Execution slots per node on `platform` under this description.
+    pub fn slots_per_node(&self, platform: &PlatformSpec) -> u32 {
+        if self.use_gpus {
+            return platform.node.gpus;
+        }
+        let allowed = platform
+            .fs
+            .usable_cores(platform.node.cores, self.local_staging && platform.node.local_ssd);
+        match self.cores_override {
+            Some(c) => c.min(platform.node.cores),
+            None => allowed,
+        }
+    }
+
+    /// Total execution slots for the pilot.
+    pub fn total_slots(&self, platform: &PlatformSpec) -> u64 {
+        self.nodes as u64 * self.slots_per_node(platform) as u64
+    }
+
+    /// Validate against a queue policy (the batch system re-checks too).
+    pub fn validate(&self, policy: &QueuePolicy) -> anyhow::Result<()> {
+        anyhow::ensure!(self.nodes > 0, "pilot needs nodes");
+        anyhow::ensure!(
+            self.nodes <= policy.max_nodes_per_job,
+            "pilot wants {} nodes, queue '{}' allows {}",
+            self.nodes,
+            policy.name,
+            policy.max_nodes_per_job
+        );
+        anyhow::ensure!(
+            self.walltime_s <= policy.max_walltime_s,
+            "pilot wants {}s walltime, queue '{}' allows {}s",
+            self.walltime_s,
+            policy.name,
+            policy.max_walltime_s
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform;
+
+    #[test]
+    fn exp1_pilot_uses_34_cores() {
+        // No local staging -> Lustre cap of 34 applies.
+        let p = PilotDescription::new(128, 48.0 * 3600.0);
+        assert_eq!(p.slots_per_node(&platform::frontera()), 34);
+    }
+
+    #[test]
+    fn exp2_pilot_uses_all_56() {
+        let p = PilotDescription::new(7600, 24.0 * 3600.0).with_local_staging();
+        assert_eq!(p.slots_per_node(&platform::frontera()), 56);
+        assert_eq!(p.total_slots(&platform::frontera()), 7600 * 56);
+    }
+
+    #[test]
+    fn exp4_pilot_counts_gpus() {
+        let p = PilotDescription::new(1000, 12.0 * 3600.0).with_gpus();
+        assert_eq!(p.total_slots(&platform::summit()), 6000);
+    }
+
+    #[test]
+    fn validation_against_queue() {
+        let pol = platform::frontera_normal();
+        assert!(PilotDescription::new(1280, 48.0 * 3600.0).validate(&pol).is_ok());
+        assert!(PilotDescription::new(1281, 3600.0).validate(&pol).is_err());
+        assert!(PilotDescription::new(10, 49.0 * 3600.0).validate(&pol).is_err());
+    }
+
+    #[test]
+    fn cores_override_caps() {
+        let p = PilotDescription::new(1, 60.0).with_cores(16);
+        assert_eq!(p.slots_per_node(&platform::frontera()), 16);
+    }
+}

@@ -1,0 +1,20 @@
+//! RADICAL-Pilot substrate: the pilot system RAPTOR extends.
+//!
+//! RP acquires resources (PilotManager → SAGA adapter → batch system),
+//! moves task descriptions through a DB-backed queue (TaskManager ↔
+//! Agent), schedules them with a *global* per-agent scheduler, and
+//! launches them through an executor.  RAPTOR bypasses the DB/global-
+//! scheduler path for its function tasks — the models here quantify what
+//! is being bypassed (see `bench_scheduler`).
+
+pub mod agent;
+pub mod db;
+pub mod description;
+pub mod manager;
+pub mod scheduler;
+
+pub use agent::{plan_startup, StartupPlan};
+pub use db::DbModel;
+pub use description::PilotDescription;
+pub use manager::{Pilot, PilotManager, PilotState};
+pub use scheduler::GlobalSchedulerModel;

@@ -1,0 +1,96 @@
+//! RP's global Agent scheduler — the *baseline* RAPTOR exists to beat.
+//!
+//! §III: "Scheduling in RP is global: all the tasks that are submitted to
+//! RP's Agent are managed by a single scheduler.  While the scheduling
+//! algorithm is tweaked to reach peaks of 350 tasks/s, its performance
+//! degrades for short running tasks on large resources."
+//!
+//! Modeled as a serial server: each task costs `per_task_s` of scheduler
+//! time (plus a slowly growing term in the number of managed slots, which
+//! produces the paper's degradation at scale).  `bench_scheduler`
+//! compares its achievable throughput against RAPTOR's dispatch path.
+
+/// The RP global scheduler's cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalSchedulerModel {
+    /// Base scheduling cost per task (seconds).  1/0.00286 ≈ 350 tasks/s.
+    pub per_task_s: f64,
+    /// Extra cost per task per 1k managed slots (search over the slot
+    /// bitmap grows with resource size).
+    pub per_task_per_kslot_s: f64,
+    /// Task launch overhead after scheduling (process spawn via the
+    /// launcher; RP's tasks are "relatively heavy").
+    pub launch_s: f64,
+}
+
+impl GlobalSchedulerModel {
+    pub fn rp_tuned() -> Self {
+        Self {
+            per_task_s: 0.00286,
+            per_task_per_kslot_s: 0.000_005,
+            launch_s: 0.1,
+        }
+    }
+
+    /// Scheduling cost of one task on a pilot with `slots` total slots.
+    pub fn schedule_cost(&self, slots: u64) -> f64 {
+        self.per_task_s + self.per_task_per_kslot_s * slots as f64 / 1000.0
+    }
+
+    /// Peak scheduling throughput (tasks/s) at `slots`.
+    pub fn peak_rate(&self, slots: u64) -> f64 {
+        1.0 / self.schedule_cost(slots)
+    }
+
+    /// Max utilization achievable with mean task duration `d` on `slots`:
+    /// the scheduler can feed at most `peak_rate` tasks/s, each occupying
+    /// a slot for `d` seconds → ρ = rate · d / slots, capped at 1.
+    pub fn max_utilization(&self, slots: u64, mean_task_s: f64) -> f64 {
+        (self.peak_rate(slots) * mean_task_s / slots as f64).min(1.0)
+    }
+
+    /// The paper's rule of thumb: tasks shorter than this can't keep
+    /// `slots` busy through the global scheduler (utilization < 1).
+    pub fn min_task_duration_for_full_util(&self, slots: u64) -> f64 {
+        slots as f64 * self.schedule_cost(slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_rate_near_350() {
+        let m = GlobalSchedulerModel::rp_tuned();
+        let r = m.peak_rate(1000);
+        assert!((300.0..360.0).contains(&r), "peak {r}");
+    }
+
+    #[test]
+    fn degrades_with_scale() {
+        let m = GlobalSchedulerModel::rp_tuned();
+        assert!(m.peak_rate(466_816) < m.peak_rate(1000) * 0.95);
+    }
+
+    #[test]
+    fn paper_thresholds_roughly_hold() {
+        // "less than ~60s for ~1000 nodes, ~120s for ~2000 nodes" (56
+        // cores/node): full utilization needs tasks at least that long.
+        let m = GlobalSchedulerModel::rp_tuned();
+        let t1k = m.min_task_duration_for_full_util(1000 * 56);
+        let t2k = m.min_task_duration_for_full_util(2000 * 56);
+        assert!((100.0..400.0).contains(&t1k), "1000-node threshold {t1k}");
+        assert!(t2k > t1k * 1.8, "threshold must grow ~linearly: {t2k}");
+    }
+
+    #[test]
+    fn short_tasks_cannot_fill_large_machines() {
+        let m = GlobalSchedulerModel::rp_tuned();
+        // 1-second tasks on the exp-3 machine: RP alone gets <1% busy.
+        let u = m.max_utilization(466_816, 1.0);
+        assert!(u < 0.01, "util {u}");
+        // Hour-long tasks are fine even at scale.
+        assert!(m.max_utilization(466_816, 3600.0) > 0.9);
+    }
+}

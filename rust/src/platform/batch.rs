@@ -1,0 +1,351 @@
+//! Batch-system simulator: queue policies, admission, node allocation.
+//!
+//! Experiment 1 depended on Frontera's `normal` queue policy (≤100
+//! concurrent jobs, ≤1280 nodes/job, ≤48 h walltime) plus machine load:
+//! of 31 submitted pilots "at most 13 executed concurrently" because of
+//! queue waiting times.  Experiments 2/3 used special whole-machine
+//! reservations (single job, 24 h / 3 h).  The simulator reproduces the
+//! *mechanisms*: per-queue admission limits, node accounting, and an
+//! external-load wait model.
+
+use std::collections::VecDeque;
+
+use crate::util::rng::SplitMix64;
+
+/// Shape of the external-load wait distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitShape {
+    /// Memoryless (bursty arrivals) — most queues most of the time.
+    Exponential,
+    /// Uniform over [0, 2*mean] — a steadily-draining busy queue; yields
+    /// the even pilot overlap of experiment 1.
+    Uniform,
+}
+
+/// Admission policy of one batch queue.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuePolicy {
+    pub name: &'static str,
+    pub max_concurrent_jobs: u32,
+    pub max_nodes_per_job: u32,
+    pub max_walltime_s: f64,
+    /// Mean extra queue wait from external machine load.
+    pub mean_external_wait_s: f64,
+    /// Distribution shape of that wait.
+    pub wait_shape: WaitShape,
+    /// Scheduler cycle: jobs start on multiples of this after eligibility.
+    pub sched_cycle_s: f64,
+}
+
+/// Frontera `normal` queue (paper §IV-A).
+pub fn frontera_normal() -> QueuePolicy {
+    QueuePolicy {
+        name: "normal",
+        max_concurrent_jobs: 100,
+        max_nodes_per_job: 1280,
+        max_walltime_s: 48.0 * 3600.0,
+        // Tuned so ~13 of 31 exp-1 pilots overlap (paper §IV-A) given
+        // per-pilot makespans of ~2-28 h.
+        mean_external_wait_s: 12.0 * 3600.0,
+        wait_shape: WaitShape::Uniform,
+        sched_cycle_s: 30.0,
+    }
+}
+
+/// Whole-machine reservation (experiments 2/3: 24 h and 3 h windows).
+pub fn reservation(walltime_s: f64) -> QueuePolicy {
+    QueuePolicy {
+        name: "reservation",
+        max_concurrent_jobs: 1,
+        max_nodes_per_job: u32::MAX,
+        max_walltime_s: walltime_s,
+        mean_external_wait_s: 0.0,
+        wait_shape: WaitShape::Exponential,
+        sched_cycle_s: 0.0,
+    }
+}
+
+/// Summit `batch` queue (exp 4 used 1000 nodes in a regular job).
+pub fn summit_batch() -> QueuePolicy {
+    QueuePolicy {
+        name: "batch",
+        max_concurrent_jobs: 100,
+        max_nodes_per_job: 4608,
+        max_walltime_s: 24.0 * 3600.0,
+        mean_external_wait_s: 1800.0,
+        wait_shape: WaitShape::Exponential,
+        sched_cycle_s: 30.0,
+    }
+}
+
+pub type JobId = u32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct Job {
+    #[allow(dead_code)] // kept for trace debugging
+    id: JobId,
+    nodes: u32,
+    state: JobState,
+    /// Earliest start allowed (submit time + external wait).
+    eligible_at: f64,
+    started_at: f64,
+}
+
+/// Errors a submission can hit (policy violations).
+#[derive(Debug, PartialEq)]
+pub enum SubmitError {
+    TooManyNodes { requested: u32, limit: u32 },
+    WalltimeExceeded { requested: f64, limit: f64 },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::TooManyNodes { requested, limit } => {
+                write!(f, "job requests {requested} nodes, queue limit {limit}")
+            }
+            SubmitError::WalltimeExceeded { requested, limit } => {
+                write!(f, "job requests {requested}s walltime, queue limit {limit}s")
+            }
+        }
+    }
+}
+impl std::error::Error for SubmitError {}
+
+/// The batch-system state machine for one machine + one queue.
+pub struct BatchSim {
+    policy: QueuePolicy,
+    total_nodes: u32,
+    free_nodes: u32,
+    running_jobs: u32,
+    jobs: Vec<Job>,
+    /// FIFO admission order (like a FIFO + backfill-free scheduler).
+    pending: VecDeque<JobId>,
+    rng: SplitMix64,
+}
+
+impl BatchSim {
+    pub fn new(total_nodes: u32, policy: QueuePolicy, seed: u64) -> Self {
+        Self {
+            policy,
+            total_nodes,
+            free_nodes: total_nodes,
+            running_jobs: 0,
+            jobs: Vec::new(),
+            pending: VecDeque::new(),
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    pub fn policy(&self) -> &QueuePolicy {
+        &self.policy
+    }
+
+    pub fn free_nodes(&self) -> u32 {
+        self.free_nodes
+    }
+
+    /// Submit a job at time `now`.  Returns its id, or a policy error.
+    pub fn submit(&mut self, now: f64, nodes: u32, walltime_s: f64) -> Result<JobId, SubmitError> {
+        if nodes > self.policy.max_nodes_per_job.min(self.total_nodes) {
+            return Err(SubmitError::TooManyNodes {
+                requested: nodes,
+                limit: self.policy.max_nodes_per_job.min(self.total_nodes),
+            });
+        }
+        if walltime_s > self.policy.max_walltime_s {
+            return Err(SubmitError::WalltimeExceeded {
+                requested: walltime_s,
+                limit: self.policy.max_walltime_s,
+            });
+        }
+        let wait = if self.policy.mean_external_wait_s > 0.0 {
+            match self.policy.wait_shape {
+                WaitShape::Exponential => self.rng.exponential(self.policy.mean_external_wait_s),
+                WaitShape::Uniform => self
+                    .rng
+                    .uniform(0.0, 2.0 * self.policy.mean_external_wait_s),
+            }
+        } else {
+            0.0
+        };
+        let id = self.jobs.len() as JobId;
+        self.jobs.push(Job {
+            id,
+            nodes,
+            state: JobState::Pending,
+            eligible_at: now + wait,
+            started_at: f64::NAN,
+        });
+        self.pending.push_back(id);
+        Ok(id)
+    }
+
+    /// Start every job that can start at `now`; returns (id, nodes) pairs.
+    ///
+    /// Any *eligible* pending job may start (in submission order) if
+    /// resources and the concurrency cap allow — eligibility models
+    /// external machine load, so an ineligible job does not block jobs
+    /// behind it.  A job that is eligible but too large for the free
+    /// nodes DOES block later jobs (FIFO, no backfill).
+    pub fn advance(&mut self, now: f64) -> Vec<(JobId, u32)> {
+        let mut started = Vec::new();
+        let mut blocked_on_nodes = false;
+        self.pending.retain(|&id| {
+            if blocked_on_nodes || self.running_jobs >= self.policy.max_concurrent_jobs {
+                return true;
+            }
+            let job = &mut self.jobs[id as usize];
+            if job.eligible_at > now {
+                return true; // not eligible yet; does not block others
+            }
+            if job.nodes > self.free_nodes {
+                blocked_on_nodes = true; // FIFO: eligible head waits
+                return true;
+            }
+            job.state = JobState::Running;
+            job.started_at = now;
+            self.free_nodes -= job.nodes;
+            self.running_jobs += 1;
+            started.push((id, job.nodes));
+            false
+        });
+        started
+    }
+
+    /// Next time `advance` could make progress (for event scheduling):
+    /// the earliest eligibility among pending jobs, if in the future.
+    pub fn next_eligible_time(&self) -> Option<f64> {
+        self.pending
+            .iter()
+            .map(|&id| self.jobs[id as usize].eligible_at)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mark a running job finished, freeing its nodes.
+    pub fn finish(&mut self, id: JobId) {
+        let job = &mut self.jobs[id as usize];
+        assert_eq!(job.state, JobState::Running, "finishing non-running job");
+        job.state = JobState::Done;
+        self.free_nodes += job.nodes;
+        self.running_jobs -= 1;
+    }
+
+    pub fn state(&self, id: JobId) -> JobState {
+        self.jobs[id as usize].state
+    }
+
+    pub fn started_at(&self, id: JobId) -> f64 {
+        self.jobs[id as usize].started_at
+    }
+
+    /// Invariant check used by property tests.
+    pub fn check_invariants(&self) {
+        let used: u32 = self
+            .jobs
+            .iter()
+            .filter(|j| j.state == JobState::Running)
+            .map(|j| j.nodes)
+            .sum();
+        assert_eq!(used + self.free_nodes, self.total_nodes, "node leak");
+        assert_eq!(
+            self.jobs
+                .iter()
+                .filter(|j| j.state == JobState::Running)
+                .count() as u32,
+            self.running_jobs
+        );
+        assert!(self.running_jobs <= self.policy.max_concurrent_jobs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_wait(policy: QueuePolicy) -> QueuePolicy {
+        QueuePolicy {
+            mean_external_wait_s: 0.0,
+            ..policy
+        }
+    }
+
+    #[test]
+    fn policy_rejects_oversize() {
+        let mut b = BatchSim::new(8368, frontera_normal(), 1);
+        let err = b.submit(0.0, 2000, 3600.0).unwrap_err();
+        assert!(matches!(err, SubmitError::TooManyNodes { limit: 1280, .. }));
+        let err = b.submit(0.0, 100, 100.0 * 3600.0).unwrap_err();
+        assert!(matches!(err, SubmitError::WalltimeExceeded { .. }));
+    }
+
+    #[test]
+    fn reservation_allows_whole_machine() {
+        let mut b = BatchSim::new(8336, reservation(3.0 * 3600.0), 2);
+        let id = b.submit(0.0, 8336, 3.0 * 3600.0).unwrap();
+        let started = b.advance(0.0);
+        assert_eq!(started, vec![(id, 8336)]);
+        b.check_invariants();
+    }
+
+    #[test]
+    fn fifo_and_capacity() {
+        let mut b = BatchSim::new(100, no_wait(frontera_normal()), 3);
+        let a = b.submit(0.0, 60, 3600.0).unwrap();
+        let c = b.submit(0.0, 60, 3600.0).unwrap();
+        let started = b.advance(0.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].0, a);
+        b.check_invariants();
+        b.finish(a);
+        let started = b.advance(10.0);
+        assert_eq!(started[0].0, c);
+        b.check_invariants();
+    }
+
+    #[test]
+    fn external_wait_staggers_starts() {
+        let mut b = BatchSim::new(8368, frontera_normal(), 4);
+        for _ in 0..31 {
+            b.submit(0.0, 128, 48.0 * 3600.0).unwrap();
+        }
+        // Nothing eligible at t=0 (exponential waits are a.s. positive).
+        assert!(b.advance(0.0).is_empty());
+        // Everything eventually starts (capacity 8368 >> 31*128).
+        let mut started = 0;
+        let mut t = 0.0;
+        while started < 31 {
+            t += 600.0;
+            started += b.advance(t).len();
+            assert!(t < 1e7, "jobs never started");
+        }
+        b.check_invariants();
+    }
+
+    #[test]
+    fn concurrent_job_cap() {
+        let mut pol = no_wait(frontera_normal());
+        pol.max_concurrent_jobs = 2;
+        let mut b = BatchSim::new(1000, pol, 5);
+        for _ in 0..5 {
+            b.submit(0.0, 10, 100.0).unwrap();
+        }
+        assert_eq!(b.advance(0.0).len(), 2);
+        b.check_invariants();
+    }
+
+    #[test]
+    fn next_eligible_time_reports_head() {
+        let mut b = BatchSim::new(100, frontera_normal(), 6);
+        assert_eq!(b.next_eligible_time(), None);
+        b.submit(0.0, 10, 100.0).unwrap();
+        assert!(b.next_eligible_time().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! HPC platform substrate: machine topologies, batch system, shared
+//! filesystem and MPI launch models.
+//!
+//! Everything the paper's experiments depended on from Frontera/Summit is
+//! modeled here so the campaign layer can reproduce the orchestration
+//! behaviour (startup, admission, contention, stragglers) without the
+//! machines.
+
+pub mod batch;
+pub mod fs;
+pub mod mpi;
+pub mod topology;
+
+pub use batch::{frontera_normal, reservation, summit_batch, BatchSim, JobId, QueuePolicy, WaitShape};
+pub use fs::{FsModel, StallWindow};
+pub use mpi::MpiModel;
+pub use topology::{frontera, localhost, summit, NodeSpec, PlatformSpec};

@@ -1,0 +1,152 @@
+//! MPI launch model: worker-rank startup times.
+//!
+//! RAPTOR launches workers via MPI to reduce latency (§III design choice
+//! 1).  Experiment 3 measured the cost at scale (Fig 7a): the *first*
+//! rank of each coordinator came up in ~10 s, but the remaining ranks
+//! straggled, the last arriving only after ~330 s — "these times depended
+//! on the performance of MPI on Frontera".
+//!
+//! Model: rank i of n starts at
+//!     t(i) = first + (last - first) * (i / (n-1))^shape + jitter
+//! A shape < 1 front-loads stragglers (matches Fig 7a's long right edge
+//! with mass in the mid range); jitter is uniform ±jitter/2.
+
+use crate::util::rng::SplitMix64;
+
+#[derive(Debug, Clone, Copy)]
+pub struct MpiModel {
+    /// Startup of the first rank (seconds).
+    pub first_rank: f64,
+    /// Startup of the last rank at `ref_ranks` total ranks (seconds).
+    pub last_rank_at_ref: f64,
+    /// Rank count at which `last_rank_at_ref` was observed.
+    pub ref_ranks: u32,
+    /// Curvature of the straggler curve (1 = linear).
+    pub shape: f64,
+    /// Uniform jitter width (seconds).
+    pub jitter: f64,
+    /// Seconds for a worker to set up its communication channel once its
+    /// rank is up (Fig 7a's second histogram).
+    pub comm_setup: f64,
+}
+
+impl MpiModel {
+    /// Frontera-like: first rank ~10 s, last of ~8328 ranks ~330 s.
+    pub fn frontera_like() -> Self {
+        Self {
+            first_rank: 10.0,
+            last_rank_at_ref: 330.0,
+            ref_ranks: 8328,
+            shape: 0.7,
+            jitter: 6.0,
+            comm_setup: 8.0,
+        }
+    }
+
+    /// Summit-like: jsrun ramps faster at the scales the paper used
+    /// (exp 4 showed "a very short startup time").
+    pub fn summit_like() -> Self {
+        Self {
+            first_rank: 8.0,
+            last_rank_at_ref: 90.0,
+            ref_ranks: 6000,
+            shape: 0.8,
+            jitter: 4.0,
+            comm_setup: 5.0,
+        }
+    }
+
+    /// Instant launch for localhost/testing.
+    pub fn instant() -> Self {
+        Self {
+            first_rank: 0.0,
+            last_rank_at_ref: 0.0,
+            ref_ranks: 1,
+            shape: 1.0,
+            jitter: 0.0,
+            comm_setup: 0.0,
+        }
+    }
+
+    /// Last-rank startup scaled to `n` ranks (sub-linear in n: launch cost
+    /// grows with the log-ish tree fan-out plus a linear straggler term).
+    fn last_rank(&self, n: u32) -> f64 {
+        if self.ref_ranks <= 1 || n <= 1 {
+            return self.first_rank;
+        }
+        let scale = (n as f64 / self.ref_ranks as f64).powf(0.85);
+        self.first_rank + (self.last_rank_at_ref - self.first_rank) * scale
+    }
+
+    /// Startup time of rank `i` out of `n` (deterministic given rng state).
+    pub fn rank_startup(&self, i: u32, n: u32, rng: &mut SplitMix64) -> f64 {
+        assert!(i < n, "rank {i} out of {n}");
+        if n == 1 {
+            return self.first_rank;
+        }
+        let frac = i as f64 / (n - 1) as f64;
+        let base = self.first_rank + (self.last_rank(n) - self.first_rank) * frac.powf(self.shape);
+        let jit = (rng.next_unit_f64() - 0.5) * self.jitter;
+        (base + jit).max(0.0)
+    }
+
+    /// Communication-channel setup time for one worker.
+    pub fn comm_setup_time(&self, rng: &mut SplitMix64) -> f64 {
+        if self.comm_setup == 0.0 {
+            return 0.0;
+        }
+        // Right-skewed: most workers are quick, a few straggle.
+        self.comm_setup * (0.5 + rng.exponential(0.5))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontera_matches_paper_endpoints() {
+        let m = MpiModel::frontera_like();
+        let mut rng = SplitMix64::new(1);
+        let first = m.rank_startup(0, 8328, &mut rng);
+        assert!((first - m.first_rank).abs() < m.jitter, "first = {first}");
+        let last = m.rank_startup(8327, 8328, &mut rng);
+        assert!(
+            (last - 330.0).abs() < 20.0,
+            "last rank at ref scale = {last}, want ~330"
+        );
+    }
+
+    #[test]
+    fn startup_monotone_in_rank_on_average() {
+        let m = MpiModel::frontera_like();
+        let mut rng = SplitMix64::new(2);
+        let early: f64 = (0..100).map(|i| m.rank_startup(i, 8000, &mut rng)).sum();
+        let late: f64 = (7900..8000).map(|i| m.rank_startup(i, 8000, &mut rng)).sum();
+        assert!(late > early * 2.0);
+    }
+
+    #[test]
+    fn smaller_jobs_launch_faster() {
+        let m = MpiModel::frontera_like();
+        let mut rng = SplitMix64::new(3);
+        let last_small = m.rank_startup(999, 1000, &mut rng);
+        let last_big = m.rank_startup(8327, 8328, &mut rng);
+        assert!(last_small < last_big * 0.5, "{last_small} vs {last_big}");
+    }
+
+    #[test]
+    fn instant_is_zero() {
+        let m = MpiModel::instant();
+        let mut rng = SplitMix64::new(4);
+        assert_eq!(m.rank_startup(0, 1, &mut rng), 0.0);
+        assert_eq!(m.comm_setup_time(&mut rng), 0.0);
+    }
+
+    #[test]
+    fn single_rank_uses_first_time() {
+        let m = MpiModel::frontera_like();
+        let mut rng = SplitMix64::new(5);
+        assert_eq!(m.rank_startup(0, 1, &mut rng), m.first_rank);
+    }
+}

@@ -1,0 +1,121 @@
+//! HPC platform topologies: node shapes and machine presets.
+//!
+//! The paper's testbeds: TACC Frontera (8,368 Cascade-Lake nodes, 56
+//! cores/node, no GPUs on the main partition) and ORNL Summit (POWER9
+//! nodes with 6 V100 GPUs each).
+
+use super::fs::FsModel;
+use super::mpi::MpiModel;
+
+/// Shape of one compute node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    pub cores: u32,
+    pub gpus: u32,
+    /// Node-local SSD available (enables the paper's exp-2 staging
+    /// optimizations: venv + offsets on local storage).
+    pub local_ssd: bool,
+}
+
+/// A whole machine.
+#[derive(Debug, Clone)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    /// Nodes available to jobs (Frontera reserved ~1000 for system work
+    /// during experiment 2; the campaign layer models that per-run).
+    pub nodes: u32,
+    pub node: NodeSpec,
+    pub fs: FsModel,
+    pub mpi: MpiModel,
+}
+
+impl PlatformSpec {
+    pub fn total_cores(&self) -> u64 {
+        self.nodes as u64 * self.node.cores as u64
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.nodes as u64 * self.node.gpus as u64
+    }
+
+    /// Restrict to a sub-partition (jobs never see more than they asked).
+    pub fn with_nodes(mut self, nodes: u32) -> Self {
+        self.nodes = nodes;
+        self
+    }
+}
+
+/// TACC Frontera: 8,368 nodes x 56 cores, Lustre shared FS, node-local
+/// SSDs, HPE/Mellanox fat-tree MPI.
+pub fn frontera() -> PlatformSpec {
+    PlatformSpec {
+        name: "frontera",
+        nodes: 8368,
+        node: NodeSpec {
+            cores: 56,
+            gpus: 0,
+            local_ssd: true,
+        },
+        fs: FsModel::lustre_like(),
+        mpi: MpiModel::frontera_like(),
+    }
+}
+
+/// ORNL Summit: 4,608 nodes x 42 usable cores + 6 V100s, GPFS (Alpine).
+pub fn summit() -> PlatformSpec {
+    PlatformSpec {
+        name: "summit",
+        nodes: 4608,
+        node: NodeSpec {
+            cores: 42,
+            gpus: 6,
+            local_ssd: true,
+        },
+        fs: FsModel::gpfs_like(),
+        mpi: MpiModel::summit_like(),
+    }
+}
+
+/// A laptop-scale platform for real-mode runs and tests.
+pub fn localhost(nodes: u32, cores: u32) -> PlatformSpec {
+    PlatformSpec {
+        name: "localhost",
+        nodes,
+        node: NodeSpec {
+            cores,
+            gpus: 0,
+            local_ssd: true,
+        },
+        fs: FsModel::instant(),
+        mpi: MpiModel::instant(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontera_shape_matches_paper() {
+        let p = frontera();
+        // Experiment 3 used 8336 nodes x 56 cores = 466,816 cores.
+        assert!(p.nodes >= 8336);
+        assert_eq!(p.node.cores, 56);
+        assert_eq!(p.with_nodes(8336).total_cores(), 466_816);
+    }
+
+    #[test]
+    fn summit_has_six_gpus_per_node() {
+        let p = summit();
+        assert_eq!(p.node.gpus, 6);
+        // Experiment 4: 1000 nodes = 6000 GPUs.
+        assert_eq!(p.with_nodes(1000).total_gpus(), 6000);
+    }
+
+    #[test]
+    fn with_nodes_restricts() {
+        let p = frontera().with_nodes(128);
+        assert_eq!(p.nodes, 128);
+        assert_eq!(p.total_cores(), 128 * 56);
+    }
+}

@@ -1,0 +1,88 @@
+//! Artifact discovery: locate the AOT HLO modules emitted by
+//! `python/compile/aot.py` (`make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+/// Names of the AOT-compiled compute graphs (see python/compile/model.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Artifact {
+    /// OpenEye-analogue CPU docking call (bundle of 8 ligands).
+    DockCpu,
+    /// AutoDock-GPU-analogue docking call (bundle of 16 ligands).
+    DockGpu,
+    /// Receptor-aware ligand fingerprint (surrogate featurizer).
+    Fingerprint,
+    /// One SGD step of the docking-score surrogate MLP.
+    SurrogateTrain,
+    /// Batched surrogate inference.
+    SurrogateInfer,
+}
+
+impl Artifact {
+    pub fn file_name(&self) -> &'static str {
+        match self {
+            Artifact::DockCpu => "dock_cpu.hlo.txt",
+            Artifact::DockGpu => "dock_gpu.hlo.txt",
+            Artifact::Fingerprint => "fingerprint.hlo.txt",
+            Artifact::SurrogateTrain => "surrogate_train.hlo.txt",
+            Artifact::SurrogateInfer => "surrogate_infer.hlo.txt",
+        }
+    }
+
+    /// Ligands per docking call for the dock artifacts.
+    pub fn bundle(&self) -> usize {
+        match self {
+            Artifact::DockCpu | Artifact::Fingerprint => crate::workload::features::CPU_BUNDLE,
+            Artifact::DockGpu => crate::workload::features::GPU_BUNDLE,
+            _ => 0,
+        }
+    }
+}
+
+/// Resolve the artifacts directory: `$RAPTOR_ARTIFACTS` if set, else
+/// `<crate root>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("RAPTOR_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Full path for one artifact.
+pub fn artifact_path(a: Artifact) -> PathBuf {
+    artifacts_dir().join(a.file_name())
+}
+
+/// True when `make artifacts` has been run (used by tests to self-skip).
+pub fn artifacts_built() -> bool {
+    artifact_path(Artifact::DockCpu).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_are_distinct() {
+        let names: Vec<_> = [
+            Artifact::DockCpu,
+            Artifact::DockGpu,
+            Artifact::Fingerprint,
+            Artifact::SurrogateTrain,
+            Artifact::SurrogateInfer,
+        ]
+        .iter()
+        .map(|a| a.file_name())
+        .collect();
+        let mut uniq = names.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), names.len());
+    }
+
+    #[test]
+    fn bundles_match_featgen() {
+        assert_eq!(Artifact::DockCpu.bundle(), 8);
+        assert_eq!(Artifact::DockGpu.bundle(), 16);
+    }
+}

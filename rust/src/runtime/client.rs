@@ -1,0 +1,125 @@
+//! PJRT execution of AOT HLO artifacts.
+//!
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  HLO *text* is the interchange format
+//! (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1's proto
+//! path rejects; the text parser reassigns ids).
+//!
+//! `PjRtClient` is `Rc`-backed and not `Send`: each worker thread owns its
+//! own `ModelRuntime`.  This mirrors the paper's architecture, where every
+//! RAPTOR worker bootstraps its own execution environment on its node (the
+//! compile cost shows up as worker startup time, §IV-C).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{artifact_path, Artifact};
+
+/// A compiled XLA executable plus the client that owns it.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    name: &'static str,
+}
+
+impl ModelRuntime {
+    /// Load and compile one artifact on a fresh CPU PJRT client.
+    pub fn load(artifact: Artifact) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::load_on(client, artifact)
+    }
+
+    /// Load and compile one artifact on an existing client (one client can
+    /// host several executables; they share the backing thread pool).
+    pub fn load_on(client: xla::PjRtClient, artifact: Artifact) -> Result<Self> {
+        let path = artifact_path(artifact);
+        Self::load_path(client, &path, artifact.file_name())
+    }
+
+    fn load_path(client: xla::PjRtClient, path: &Path, name: &'static str) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Self { client, exe, name })
+    }
+
+    /// The PJRT client hosting this executable (`PjRtClient` is a cheap
+    /// `Rc` clone; share one client across the artifacts of a worker).
+    pub fn client(&self) -> xla::PjRtClient {
+        self.client.clone()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Execute with f32 tensor inputs; returns all outputs as f32 vectors.
+    ///
+    /// The AOT path lowers with `return_tuple=True`, so the single result
+    /// literal is always a tuple — it is decomposed here.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                if dims.len() > 1 {
+                    lit.reshape(dims).context("reshaping input literal")
+                } else {
+                    Ok(lit)
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (lets callers cache invariant inputs
+    /// such as the receptor grid across calls).
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::artifacts_built;
+
+    #[test]
+    fn load_and_run_dock_cpu_if_built() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = ModelRuntime::load(Artifact::DockCpu).unwrap();
+        let b = Artifact::DockCpu.bundle();
+        let lig = vec![0.1f32; b * 32 * 32];
+        let rec = vec![0.05f32; 128 * 32];
+        let out = rt
+            .run_f32(&[
+                (&lig, &[b as i64, 32, 32]),
+                (&rec, &[128, 32]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), b);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,176 @@
+//! The docking engine: what a RAPTOR worker actually runs for a function
+//! task on the real execution path.
+//!
+//! One `DockEngine` per worker thread.  The receptor literal is built once
+//! per protein and cached (the paper's experiment-2 optimization: "the
+//! [receptor] data were loaded once per node and then reused for all
+//! docking runs assigned to that specific node").
+
+use anyhow::Result;
+
+use super::artifacts::Artifact;
+use super::client::ModelRuntime;
+use crate::workload::features::{self, ATOMS, FEAT, GRID};
+
+/// Real PJRT-backed docking engine.
+pub struct DockEngine {
+    rt: ModelRuntime,
+    bundle: usize,
+    /// Cached receptor literal for the currently-loaded protein.
+    receptor: Option<(u64, xla::Literal)>,
+}
+
+impl DockEngine {
+    /// Create an engine for the CPU (OpenEye-analogue) artifact.
+    pub fn cpu() -> Result<Self> {
+        Self::new(Artifact::DockCpu)
+    }
+
+    /// Create an engine for the GPU-bundle (AutoDock-analogue) artifact.
+    pub fn gpu_bundle() -> Result<Self> {
+        Self::new(Artifact::DockGpu)
+    }
+
+    pub fn new(artifact: Artifact) -> Result<Self> {
+        assert!(
+            matches!(artifact, Artifact::DockCpu | Artifact::DockGpu),
+            "DockEngine requires a dock artifact"
+        );
+        Ok(Self {
+            rt: ModelRuntime::load(artifact)?,
+            bundle: artifact.bundle(),
+            receptor: None,
+        })
+    }
+
+    /// Share an existing PJRT client (several engines on one worker).
+    pub fn new_on(client: xla::PjRtClient, artifact: Artifact) -> Result<Self> {
+        Ok(Self {
+            rt: ModelRuntime::load_on(client, artifact)?,
+            bundle: artifact.bundle(),
+            receptor: None,
+        })
+    }
+
+    /// Ligands per docking call.
+    pub fn bundle(&self) -> usize {
+        self.bundle
+    }
+
+    /// Ensure the cached receptor literal matches `protein_seed`.
+    fn refresh_receptor(&mut self, protein_seed: u64) -> Result<()> {
+        if self.receptor.as_ref().map(|(s, _)| *s) != Some(protein_seed) {
+            let rec = features::receptor_features(protein_seed, GRID, FEAT);
+            let lit = xla::Literal::vec1(&rec).reshape(&[GRID as i64, FEAT as i64])?;
+            self.receptor = Some((protein_seed, lit));
+        }
+        Ok(())
+    }
+
+    /// Dock one bundle of consecutive ligands against a protein.
+    ///
+    /// Generates the ligand features deterministically (parity with the
+    /// python oracle), executes the AOT graph via PJRT, and returns one
+    /// score per ligand (lower = stronger predicted binding).
+    pub fn dock(
+        &mut self,
+        library_seed: u64,
+        first_ligand_id: u64,
+        protein_seed: u64,
+    ) -> Result<Vec<f32>> {
+        let lig = features::ligand_batch(library_seed, first_ligand_id, self.bundle, ATOMS, FEAT);
+        self.dock_features(&lig, protein_seed)
+    }
+
+    /// Dock a pre-built ligand feature batch (used by tests / benches).
+    pub fn dock_features(&mut self, lig: &[f32], protein_seed: u64) -> Result<Vec<f32>> {
+        assert_eq!(lig.len(), self.bundle * ATOMS * FEAT, "bad ligand batch size");
+        let lig_lit = xla::Literal::vec1(lig).reshape(&[
+            self.bundle as i64,
+            ATOMS as i64,
+            FEAT as i64,
+        ])?;
+        self.refresh_receptor(protein_seed)?;
+        let rec_lit = &self.receptor.as_ref().unwrap().1;
+        let mut out = self.rt.run_literals(&[&lig_lit, rec_lit])?;
+        anyhow::ensure!(out.len() == 1, "dock graph must return 1 output");
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::artifacts_built;
+    use crate::util::json;
+
+    fn load_testvec(name: &str) -> Option<json::Json> {
+        let path = super::super::artifacts::artifacts_dir().join(name);
+        let text = std::fs::read_to_string(path).ok()?;
+        Some(json::parse(&text).unwrap())
+    }
+
+    /// End-to-end numeric pin: rust featgen + PJRT execution must reproduce
+    /// the python oracle's scores bit-close (fp32 tolerance).
+    #[test]
+    fn dock_cpu_matches_python_oracle() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let vec = load_testvec("testvec_dock_cpu.json").unwrap();
+        let lib_seed = vec.num_field("library_seed").unwrap() as u64;
+        let prot_seed = vec.num_field("protein_seed").unwrap() as u64;
+        let first = vec.num_field("first_ligand_id").unwrap() as u64;
+        let want = vec.f32_field("score").unwrap();
+
+        let mut engine = DockEngine::cpu().unwrap();
+        let got = engine.dock(lib_seed, first, prot_seed).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                "score mismatch: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn dock_gpu_matches_python_oracle() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let vec = load_testvec("testvec_dock_gpu.json").unwrap();
+        let lib_seed = vec.num_field("library_seed").unwrap() as u64;
+        let prot_seed = vec.num_field("protein_seed").unwrap() as u64;
+        let first = vec.num_field("first_ligand_id").unwrap() as u64;
+        let want = vec.f32_field("score").unwrap();
+
+        let mut engine = DockEngine::gpu_bundle().unwrap();
+        assert_eq!(engine.bundle(), 16);
+        let got = engine.dock(lib_seed, first, prot_seed).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                "score mismatch: got {g}, want {w}"
+            );
+        }
+    }
+
+    /// The receptor cache must not change results across proteins.
+    #[test]
+    fn receptor_cache_is_correct() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut engine = DockEngine::cpu().unwrap();
+        let a1 = engine.dock(1, 0, 100).unwrap();
+        let b1 = engine.dock(1, 0, 200).unwrap();
+        let a2 = engine.dock(1, 0, 100).unwrap();
+        assert_eq!(a1, a2, "cache broke determinism");
+        assert_ne!(a1, b1, "different proteins must score differently");
+    }
+}

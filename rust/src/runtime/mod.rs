@@ -1,0 +1,15 @@
+//! Runtime layer: load and execute AOT XLA artifacts via PJRT.
+//!
+//! Python (jax + pallas) runs only at build time (`make artifacts`); this
+//! module is the only bridge between the rust coordinator and the compiled
+//! compute graphs, so the request path is pure rust + XLA.
+
+pub mod artifacts;
+pub mod client;
+pub mod docking;
+pub mod surrogate;
+
+pub use artifacts::{artifact_path, artifacts_built, artifacts_dir, Artifact};
+pub use client::ModelRuntime;
+pub use docking::DockEngine;
+pub use surrogate::{affinity_descriptor, FingerprintEngine, SurrogateParams, SurrogateRuntime};

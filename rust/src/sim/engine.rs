@@ -1,0 +1,217 @@
+//! The event heap: a min-heap of (time, seq, event) with a virtual clock.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+/// One scheduled event.
+#[derive(Debug)]
+pub struct EventEntry<E> {
+    pub time: SimTime,
+    seq: u64,
+    pub event: E,
+}
+
+impl<E> EventEntry<E> {
+    #[inline]
+    pub fn time(&self) -> SimTime {
+        self.time
+    }
+}
+
+impl<E> PartialEq for EventEntry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for EventEntry<E> {}
+
+impl<E> Ord for EventEntry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap; ties broken by sequence for determinism
+        // (packed u128 and u64-bit-pattern comparators were tried and
+        // measured SLOWER on this host — see EXPERIMENTS.md §Perf).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for EventEntry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic discrete-event engine over event type `E`.
+pub struct Engine<E> {
+    heap: BinaryHeap<EventEntry<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Events processed so far (perf counter).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending event count.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` at absolute time `at` (must be >= now).
+    pub fn schedule(&mut self, at: SimTime, event: E) {
+        debug_assert!(
+            at >= self.now,
+            "scheduling into the past: {at} < {}",
+            self.now
+        );
+        let entry = EventEntry {
+            time: at.max(self.now),
+            seq: self.seq,
+            event,
+        };
+        self.seq += 1;
+        self.heap.push(entry);
+    }
+
+    /// Schedule `event` after a relative delay.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the next event, advancing the clock.  Returns None when idle.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let entry = self.heap.pop()?;
+        self.now = entry.time();
+        self.processed += 1;
+        Some((self.now, entry.event))
+    }
+
+    /// Drive a handler to quiescence.  The handler may schedule more events.
+    pub fn run<H: FnMut(&mut Engine<E>, SimTime, E)>(&mut self, mut handler: H) {
+        while let Some((t, ev)) = self.pop() {
+            handler(self, t, ev);
+        }
+    }
+
+    /// Drive until `deadline` (events at exactly `deadline` are processed);
+    /// remaining events stay queued.  Returns true if the heap drained.
+    pub fn run_until<H: FnMut(&mut Engine<E>, SimTime, E)>(
+        &mut self,
+        deadline: SimTime,
+        mut handler: H,
+    ) -> bool {
+        loop {
+            match self.heap.peek() {
+                None => return true,
+                Some(e) if e.time() > deadline => {
+                    self.now = deadline;
+                    return false;
+                }
+                _ => {}
+            }
+            let (t, ev) = self.pop().unwrap();
+            handler(self, t, ev);
+        }
+    }
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_for_ties() {
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(1.0, 10);
+        eng.schedule(1.0, 11);
+        eng.schedule(0.5, 9);
+        let mut seen = Vec::new();
+        eng.run(|_, _, e| seen.push(e));
+        assert_eq!(seen, vec![9, 10, 11]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut eng: Engine<u8> = Engine::new();
+        eng.schedule(2.0, 1);
+        eng.schedule(5.0, 2);
+        let mut times = Vec::new();
+        eng.run(|eng, t, _| {
+            times.push(t);
+            assert_eq!(eng.now(), t);
+        });
+        assert_eq!(times, vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn handler_can_reschedule() {
+        // A self-rescheduling "tick" event: run 5 ticks then stop.
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(0.0, 0);
+        let mut count = 0;
+        eng.run(|eng, _, n| {
+            count += 1;
+            if n < 4 {
+                eng.schedule_in(1.0, n + 1);
+            }
+        });
+        assert_eq!(count, 5);
+        assert_eq!(eng.now(), 4.0);
+        assert_eq!(eng.processed(), 5);
+    }
+
+    #[test]
+    fn run_until_leaves_future_events() {
+        let mut eng: Engine<u8> = Engine::new();
+        eng.schedule(1.0, 1);
+        eng.schedule(10.0, 2);
+        let mut seen = Vec::new();
+        let drained = eng.run_until(5.0, |_, _, e| seen.push(e));
+        assert!(!drained);
+        assert_eq!(seen, vec![1]);
+        assert_eq!(eng.pending(), 1);
+        assert_eq!(eng.now(), 5.0);
+        let drained = eng.run_until(f64::INFINITY, |_, _, e| seen.push(e));
+        assert!(drained);
+        assert_eq!(seen, vec![1, 2]);
+    }
+
+    #[test]
+    fn schedule_in_clamps_negative() {
+        let mut eng: Engine<u8> = Engine::new();
+        eng.schedule(1.0, 1);
+        eng.pop();
+        // now = 1.0; a zero-delay event must not go into the past.
+        eng.schedule_in(0.0, 2);
+        let (t, _) = eng.pop().unwrap();
+        assert_eq!(t, 1.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Discrete-event simulation engine.
+//!
+//! The benchmark harness replays paper-scale campaigns (8,336 nodes,
+//! hundreds of millions of tasks) in virtual time: the same coordinator
+//! logic that runs on threads in real mode is driven here by an event
+//! heap.  Determinism: ties are broken by insertion sequence number, so a
+//! given seed always yields an identical trace.
+
+mod engine;
+
+pub use engine::{Engine, EventEntry};
+
+/// Virtual time in seconds since run start.
+pub type SimTime = f64;

@@ -1,0 +1,193 @@
+//! Task model: RP/RAPTOR tasks are fully-decoupled black boxes with
+//! resource requirements; RAPTOR adds *function* tasks next to RP's
+//! *executable* tasks (§III).
+
+/// Unique task id within a session.
+pub type TaskId = u64;
+
+/// What a function task computes: dock a bundle of consecutive ligands
+/// from a library against one protein target.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DockCall {
+    pub library_seed: u64,
+    pub protein_seed: u64,
+    pub first_ligand_id: u64,
+    /// Ligands in this call (CPU_BUNDLE or GPU_BUNDLE).
+    pub bundle: u32,
+}
+
+/// What an executable task runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecCall {
+    /// Program + args (real mode forks this).
+    pub command: Vec<String>,
+    /// Nominal duration used by the simulator (seconds); real mode passes
+    /// it to the payload (e.g. a sleep/stress stand-in).
+    pub sim_duration: f64,
+}
+
+/// Task payload: the paper's two task species.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskKind {
+    /// Python-function analogue: a docking call executed in-process via
+    /// the PJRT runtime (OpenEye analogue).
+    Function(DockCall),
+    /// Arbitrary non-MPI executable (AutoDock-GPU / `stress` analogue).
+    Executable(ExecCall),
+}
+
+impl TaskKind {
+    pub fn is_function(&self) -> bool {
+        matches!(self, TaskKind::Function(_))
+    }
+}
+
+/// A task description as submitted through the RAPTOR API.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDesc {
+    pub uid: TaskId,
+    pub kind: TaskKind,
+    /// CPU cores required (1 for docking calls).
+    pub cores: u32,
+    /// GPUs required (1 for AutoDock-analogue calls on Summit).
+    pub gpus: u32,
+}
+
+impl TaskDesc {
+    pub fn function(uid: TaskId, call: DockCall) -> Self {
+        Self {
+            uid,
+            kind: TaskKind::Function(call),
+            cores: 1,
+            gpus: 0,
+        }
+    }
+
+    pub fn executable(uid: TaskId, call: ExecCall) -> Self {
+        Self {
+            uid,
+            kind: TaskKind::Executable(call),
+            cores: 1,
+            gpus: 0,
+        }
+    }
+
+    pub fn with_gpus(mut self, gpus: u32) -> Self {
+        self.gpus = gpus;
+        self
+    }
+}
+
+/// Task lifecycle states (subset of RP's state model that the experiments
+/// observe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TaskState {
+    New,
+    Scheduled,
+    Executing,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl TaskState {
+    /// Valid transitions form a DAG; enforced by `advance`.
+    pub fn can_advance_to(self, next: TaskState) -> bool {
+        use TaskState::*;
+        matches!(
+            (self, next),
+            (New, Scheduled)
+                | (Scheduled, Executing)
+                | (Executing, Done)
+                | (Executing, Failed)
+                | (New, Canceled)
+                | (Scheduled, Canceled)
+                | (Executing, Canceled)
+        )
+    }
+}
+
+/// Completed-task record flowing back to the coordinator.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub uid: TaskId,
+    pub state: TaskState,
+    /// Docking scores (function tasks in real mode).
+    pub scores: Vec<f32>,
+    /// Wall-clock (or virtual) start/finish, seconds since run start.
+    pub started: f64,
+    pub finished: f64,
+    /// Worker that executed the task.
+    pub worker: u32,
+    /// On failure, the original description (lets the coordinator apply
+    /// its retry policy without retaining every submitted task).
+    pub failed_task: Option<Box<TaskDesc>>,
+}
+
+impl TaskResult {
+    pub fn duration(&self) -> f64 {
+        self.finished - self.started
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_machine_allows_happy_path() {
+        use TaskState::*;
+        assert!(New.can_advance_to(Scheduled));
+        assert!(Scheduled.can_advance_to(Executing));
+        assert!(Executing.can_advance_to(Done));
+        assert!(Executing.can_advance_to(Failed));
+    }
+
+    #[test]
+    fn state_machine_rejects_backwards() {
+        use TaskState::*;
+        assert!(!Done.can_advance_to(Executing));
+        assert!(!Executing.can_advance_to(Scheduled));
+        assert!(!Done.can_advance_to(Canceled));
+        assert!(!New.can_advance_to(Executing), "must schedule first");
+    }
+
+    #[test]
+    fn builders_set_requirements() {
+        let t = TaskDesc::function(
+            1,
+            DockCall {
+                library_seed: 1,
+                protein_seed: 2,
+                first_ligand_id: 0,
+                bundle: 8,
+            },
+        );
+        assert_eq!(t.cores, 1);
+        assert!(t.kind.is_function());
+        let e = TaskDesc::executable(
+            2,
+            ExecCall {
+                command: vec!["sleep".into(), "1".into()],
+                sim_duration: 1.0,
+            },
+        )
+        .with_gpus(1);
+        assert_eq!(e.gpus, 1);
+        assert!(!e.kind.is_function());
+    }
+
+    #[test]
+    fn result_duration() {
+        let r = TaskResult {
+            uid: 1,
+            state: TaskState::Done,
+            scores: vec![],
+            started: 10.0,
+            finished: 25.5,
+            worker: 0,
+            failed_task: None,
+        };
+        assert!((r.duration() - 15.5).abs() < 1e-12);
+    }
+}

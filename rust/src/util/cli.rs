@@ -1,0 +1,96 @@
+//! Minimal CLI argument parsing (no external crates in this environment).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    /// `value_keys`: option names that take a value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, value_keys: &[&str]) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_keys.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?;
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad value for --{name}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["scale", "id", "out"]).unwrap()
+    }
+
+    #[test]
+    fn positional_options_flags() {
+        let a = parse("exp --id 3 --scale 0.1 --full");
+        assert_eq!(a.positional, vec!["exp"]);
+        assert_eq!(a.get("id"), Some("3"));
+        assert_eq!(a.get_parse("scale", 1.0).unwrap(), 0.1);
+        assert!(a.flag("full"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("exp --id=2");
+        assert_eq!(a.get("id"), Some("2"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(vec!["--id".to_string()], &["id"]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = parse("--scale abc");
+        assert!(a.get_parse::<f64>("scale", 1.0).is_err());
+    }
+}

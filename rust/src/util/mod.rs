@@ -1,0 +1,32 @@
+//! Shared utilities: deterministic RNG, JSON, statistics, CSV export.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+use std::path::Path;
+
+/// Write a string to a file, creating parent directories.
+pub fn write_file(path: impl AsRef<Path>, contents: &str) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)?;
+    Ok(())
+}
+
+/// Format a rate in docks/hour the way the paper's Table I does (×10^6/h).
+pub fn fmt_mega_per_hour(per_sec: f64) -> String {
+    format!("{:.1}", per_sec * 3600.0 / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn mega_per_hour_formatting() {
+        // 40,000 docks/s ≈ 144.0 ×10^6/h (paper, experiment 2)
+        assert_eq!(super::fmt_mega_per_hour(40_000.0), "144.0");
+    }
+}

@@ -1,0 +1,272 @@
+//! Streaming statistics, percentiles and histograms for experiment reports.
+
+/// Online accumulator for scalar samples (docking times, rates, ...).
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    n: u64,
+    sum: f64,
+    sum2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            sum: 0.0,
+            sum2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum2 += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &Accum) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum2 += other.sum2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum2 / self.n as f64 - m * m).max(0.0)
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+/// Exact percentile over a sample vector (interpolated, like numpy default).
+pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q), "percentile out of range: {q}");
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = q / 100.0 * (samples.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        samples[lo]
+    } else {
+        let w = rank - lo as f64;
+        samples[lo] * (1.0 - w) + samples[hi] * w
+    }
+}
+
+/// Fixed-width histogram over [lo, hi); overflow/underflow clamp to the
+/// edge bins so no sample is dropped (long-tail distributions matter here).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let nb = self.bins.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * nb as f64).floor() as i64).clamp(0, nb as i64 - 1) as usize;
+        self.bins[idx] += 1;
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    /// Bin centers, for CSV export.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+
+    /// Render a compact ASCII bar chart (used by the bench binaries to show
+    /// figure shapes directly in the terminal).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let centers = self.centers();
+        let mut out = String::new();
+        for (c, &n) in centers.iter().zip(&self.bins) {
+            let bar = (n as f64 / max as f64 * width as f64).round() as usize;
+            out.push_str(&format!("{c:>10.1} | {:<width$} {n}\n", "#".repeat(bar)));
+        }
+        out
+    }
+}
+
+/// A time series of (t, value) points, downsampled on push for plotting.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self { points: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    /// Average value over [t0, t1] assuming step interpolation.
+    pub fn mean_over(&self, t0: f64, t1: f64) -> f64 {
+        if self.points.is_empty() || t1 <= t0 {
+            return 0.0;
+        }
+        let mut area = 0.0;
+        let mut prev_t = t0;
+        let mut prev_v = 0.0;
+        for &(t, v) in &self.points {
+            if t < t0 {
+                prev_v = v;
+                continue;
+            }
+            if t > t1 {
+                break;
+            }
+            area += prev_v * (t - prev_t);
+            prev_t = t;
+            prev_v = v;
+        }
+        area += prev_v * (t1 - prev_t);
+        area / (t1 - t0)
+    }
+
+    pub fn to_csv(&self, header: (&str, &str)) -> String {
+        let mut s = format!("{},{}\n", header.0, header.1);
+        for &(t, v) in &self.points {
+            s.push_str(&format!("{t},{v}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_basic() {
+        let mut a = Accum::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.push(x);
+        }
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+        assert!((a.var() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accum_merge_equals_combined() {
+        let mut a = Accum::new();
+        let mut b = Accum::new();
+        let mut c = Accum::new();
+        for i in 0..10 {
+            let x = i as f64 * 0.7;
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+            c.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert!((a.mean() - c.mean()).abs() < 1e-12);
+        assert!((a.std() - c.std()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 100.0), 4.0);
+        assert!((percentile(&mut v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps_overflow() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0);
+        h.push(500.0);
+        h.push(5.0);
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[9], 1);
+        assert_eq!(h.bins()[5], 1);
+    }
+
+    #[test]
+    fn series_mean_over_step() {
+        let mut s = Series::new();
+        s.push(0.0, 0.0);
+        s.push(5.0, 10.0);
+        // value is 0 on [0,5), 10 on [5,10] -> mean 5
+        assert!((s.mean_over(0.0, 10.0) - 5.0).abs() < 1e-9);
+    }
+}

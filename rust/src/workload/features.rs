@@ -1,0 +1,108 @@
+//! Deterministic ligand/receptor feature synthesis.
+//!
+//! Bit-for-bit identical to `python/compile/featgen.py` (pinned by the
+//! `testvec_featgen.json` artifact): the rust hot path generates the same
+//! input tensors the python oracle scored at build time, so PJRT results
+//! can be validated end-to-end without python at runtime.
+
+use crate::util::rng::{ligand_seed, receptor_seed, SplitMix64};
+
+/// Problem geometry shared with `python/compile/kernels/dock.py`.
+pub const ATOMS: usize = 32;
+pub const FEAT: usize = 32;
+pub const GRID: usize = 128;
+/// OpenEye-analogue bundle (ligands per CPU docking call).
+pub const CPU_BUNDLE: usize = 8;
+/// AutoDock-GPU-analogue bundle (paper §IV-D: 16 ligands per GPU call).
+pub const GPU_BUNDLE: usize = 16;
+/// Receptor poses per docking call.
+pub const N_POSE: usize = 4;
+
+/// Fill `out` with values in [-1, 1) from a SplitMix64 stream.
+fn fill_sym(out: &mut [f32], seed: u64) {
+    let mut r = SplitMix64::new(seed);
+    for v in out.iter_mut() {
+        *v = r.next_unit_f32() * 2.0 - 1.0;
+    }
+}
+
+/// Feature tensor (row-major [atoms, feat]) for one ligand.
+pub fn ligand_features(library_seed: u64, ligand_id: u64, atoms: usize, feat: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; atoms * feat];
+    fill_sym(&mut out, ligand_seed(library_seed, ligand_id));
+    out
+}
+
+/// Receptor probe grid (row-major [grid, feat]) for one protein target.
+pub fn receptor_features(protein_seed: u64, grid: usize, feat: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; grid * feat];
+    fill_sym(&mut out, receptor_seed(protein_seed));
+    out
+}
+
+/// Batch of consecutive ligands (row-major [batch, atoms, feat]).
+pub fn ligand_batch(
+    library_seed: u64,
+    first_id: u64,
+    batch: usize,
+    atoms: usize,
+    feat: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(batch * atoms * feat);
+    for i in 0..batch {
+        out.extend(ligand_features(library_seed, first_id + i as u64, atoms, feat));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = ligand_features(1, 7, ATOMS, FEAT);
+        let b = ligand_features(1, 7, ATOMS, FEAT);
+        assert_eq!(a, b);
+        let c = ligand_features(1, 8, ATOMS, FEAT);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn values_in_range() {
+        for v in receptor_features(3, GRID, FEAT) {
+            assert!((-1.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn batch_is_concatenation() {
+        let b = ligand_batch(5, 100, 3, 4, 4);
+        let l1 = ligand_features(5, 101, 4, 4);
+        assert_eq!(&b[16..32], &l1[..]);
+    }
+
+    /// Parity with python featgen, pinned by artifacts/testvec_featgen.json
+    /// (only run when artifacts are built).
+    #[test]
+    fn python_parity_if_artifacts_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/testvec_featgen.json");
+        let Ok(text) = std::fs::read_to_string(path) else {
+            eprintln!("skipping: {path} not built");
+            return;
+        };
+        let v = crate::util::json::parse(&text).unwrap();
+        let lib_seed = 0x5EED_0001u64;
+        let want_lig = v.f32_field("lig_0_0").unwrap();
+        let got_lig = ligand_features(lib_seed, 0, 4, 4);
+        assert_eq!(got_lig, want_lig, "ligand featgen parity broken");
+        let want_rec = v.f32_field("rec_0").unwrap();
+        let got_rec = receptor_features(42, 4, 4);
+        assert_eq!(got_rec, want_rec, "receptor featgen parity broken");
+        // unit_f32 stream parity
+        let want_u = v.f32_field("unit_f32").unwrap();
+        let mut r = SplitMix64::new(0xDEAD_BEEF);
+        let got_u: Vec<f32> = (0..want_u.len()).map(|_| r.next_unit_f32()).collect();
+        assert_eq!(got_u, want_u, "splitmix unit_f32 parity broken");
+    }
+}

@@ -1,0 +1,217 @@
+//! Ligand libraries: the compound databases a campaign iterates through.
+//!
+//! Stand-ins for the paper's libraries (same cardinalities):
+//! * Orderable-zinc-db-enaHLL — 6.6M candidates (experiments 1, 3)
+//! * mcule-ultimate-200204-VJL — 126M candidates (experiments 2, 4)
+//!
+//! A library is just (seed, size): ligand *i*'s feature tensor is derived
+//! deterministically from the seed (see `features`), and "pre-computed
+//! data offsets for faster access" (§IV) become O(1) index arithmetic.
+
+use crate::task::{DockCall, TaskDesc, TaskId};
+
+/// A compound library.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LigandLibrary {
+    pub name: &'static str,
+    pub seed: u64,
+    pub size: u64,
+}
+
+impl LigandLibrary {
+    /// Orderable-zinc-db-enaHLL: 6.6M candidates.
+    pub fn orderable_zinc() -> Self {
+        Self {
+            name: "Orderable-zinc-db-enaHLL",
+            seed: 0x21AC_0001,
+            size: 6_600_000,
+        }
+    }
+
+    /// mcule-ultimate-200204-VJL: 126M candidates.
+    pub fn mcule_ultimate() -> Self {
+        Self {
+            name: "mcule-ultimate-200204-VJL",
+            seed: 0x3C71_E002,
+            size: 126_000_000,
+        }
+    }
+
+    /// Exact subset of experiment 3 (6,685,316 ligands docked).
+    pub fn orderable_zinc_exp3() -> Self {
+        Self {
+            size: 6_685_316,
+            ..Self::orderable_zinc()
+        }
+    }
+
+    /// Experiment-4 subset (~57M ligands).
+    pub fn mcule_exp4() -> Self {
+        Self {
+            size: 57_000_000,
+            ..Self::mcule_ultimate()
+        }
+    }
+
+    /// A tiny library for tests and real-mode examples.
+    pub fn tiny(size: u64) -> Self {
+        Self {
+            name: "tiny-test-library",
+            seed: 0x7E57,
+            size,
+        }
+    }
+
+    /// Number of docking calls to cover the library at `bundle` ligands
+    /// per call (last call may be short; the generator pads ids, never
+    /// exceeding `size` scored ligands in accounting).
+    pub fn n_bundles(&self, bundle: u32) -> u64 {
+        self.size.div_ceil(bundle as u64)
+    }
+
+    /// Iterate docking calls with a coordinator stride (§IV: "each
+    /// coordinator iterates at different strides through the ligands
+    /// database, using pre-computed data offsets").
+    ///
+    /// Coordinator `c` of `n` sees bundles c, c+n, c+2n, ...
+    pub fn strided_calls(
+        &self,
+        protein_seed: u64,
+        bundle: u32,
+        coordinator: u32,
+        n_coordinators: u32,
+    ) -> StridedCalls {
+        assert!(coordinator < n_coordinators);
+        StridedCalls {
+            library: *self,
+            protein_seed,
+            bundle,
+            next: coordinator as u64,
+            stride: n_coordinators as u64,
+            total: self.n_bundles(bundle),
+        }
+    }
+}
+
+/// Iterator of `DockCall`s for one coordinator's stride.
+#[derive(Debug, Clone)]
+pub struct StridedCalls {
+    library: LigandLibrary,
+    protein_seed: u64,
+    bundle: u32,
+    next: u64,
+    stride: u64,
+    total: u64,
+}
+
+impl StridedCalls {
+    /// Bundles remaining in this stride.
+    pub fn remaining(&self) -> u64 {
+        if self.next >= self.total {
+            0
+        } else {
+            (self.total - self.next).div_ceil(self.stride)
+        }
+    }
+
+    /// Number of ligands actually covered by bundle index `b`.
+    fn bundle_len(&self, b: u64) -> u32 {
+        let first = b * self.bundle as u64;
+        ((self.library.size - first).min(self.bundle as u64)) as u32
+    }
+}
+
+impl Iterator for StridedCalls {
+    type Item = DockCall;
+
+    fn next(&mut self) -> Option<DockCall> {
+        if self.next >= self.total {
+            return None;
+        }
+        let b = self.next;
+        self.next += self.stride;
+        Some(DockCall {
+            library_seed: self.library.seed,
+            protein_seed: self.protein_seed,
+            first_ligand_id: b * self.bundle as u64,
+            bundle: self.bundle_len(b),
+        })
+    }
+}
+
+/// Turn a stream of calls into task descriptions with sequential ids
+/// starting at `first_uid`.
+pub fn calls_to_tasks(
+    calls: impl Iterator<Item = DockCall>,
+    first_uid: TaskId,
+) -> impl Iterator<Item = TaskDesc> {
+    calls
+        .enumerate()
+        .map(move |(i, c)| TaskDesc::function(first_uid + i as TaskId, c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn library_sizes_match_paper() {
+        assert_eq!(LigandLibrary::orderable_zinc().size, 6_600_000);
+        assert_eq!(LigandLibrary::mcule_ultimate().size, 126_000_000);
+        assert_eq!(LigandLibrary::orderable_zinc_exp3().size, 6_685_316);
+    }
+
+    #[test]
+    fn strides_partition_exactly() {
+        // Every bundle appears in exactly one coordinator's stride.
+        let lib = LigandLibrary::tiny(1003);
+        let bundle = 8;
+        let n_coord = 7;
+        let mut seen = HashSet::new();
+        for c in 0..n_coord {
+            for call in lib.strided_calls(1, bundle, c, n_coord) {
+                assert!(seen.insert(call.first_ligand_id), "dup bundle");
+            }
+        }
+        assert_eq!(seen.len() as u64, lib.n_bundles(bundle));
+        // All ligands covered:
+        let covered: u64 = seen
+            .iter()
+            .map(|&first| (lib.size - first).min(bundle as u64))
+            .sum();
+        assert_eq!(covered, lib.size);
+    }
+
+    #[test]
+    fn last_bundle_is_short() {
+        let lib = LigandLibrary::tiny(10);
+        let calls: Vec<_> = lib.strided_calls(1, 8, 0, 1).collect();
+        assert_eq!(calls.len(), 2);
+        assert_eq!(calls[0].bundle, 8);
+        assert_eq!(calls[1].bundle, 2);
+    }
+
+    #[test]
+    fn remaining_counts_down() {
+        let lib = LigandLibrary::tiny(100);
+        let mut it = lib.strided_calls(1, 8, 0, 3);
+        let r0 = it.remaining();
+        it.next();
+        assert_eq!(it.remaining(), r0 - 1);
+        let total: u64 = (0..3)
+            .map(|c| lib.strided_calls(1, 8, c, 3).remaining())
+            .sum();
+        assert_eq!(total, lib.n_bundles(8));
+    }
+
+    #[test]
+    fn calls_to_tasks_sequential_uids() {
+        let lib = LigandLibrary::tiny(64);
+        let tasks: Vec<_> = calls_to_tasks(lib.strided_calls(9, 8, 0, 1), 100).collect();
+        assert_eq!(tasks.len(), 8);
+        assert_eq!(tasks[0].uid, 100);
+        assert_eq!(tasks[7].uid, 107);
+        assert!(tasks.iter().all(|t| t.kind.is_function()));
+    }
+}

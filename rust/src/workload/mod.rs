@@ -1,0 +1,11 @@
+//! Workload substrate: synthetic ligand libraries, protein targets and
+//! docking-time models replacing the paper's proprietary inputs (see
+//! DESIGN.md §1 for the substitution table).
+pub mod duration;
+pub mod features;
+pub mod ligand;
+pub mod protein;
+
+pub use duration::{DockTimeModel, DurationSample, UniformModel};
+pub use ligand::{calls_to_tasks, LigandLibrary, StridedCalls};
+pub use protein::{ProteinSet, ProteinTarget};

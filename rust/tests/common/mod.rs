@@ -1,0 +1,19 @@
+//! Shared helpers for the integration/property test suites.
+
+use raptor::util::rng::SplitMix64;
+
+/// Minimal property-test driver: runs `body` over `n` seeded cases and
+/// reports the failing seed (re-runnable deterministically).
+pub fn prop(n: u64, base_seed: u64, mut body: impl FnMut(&mut SplitMix64)) {
+    for case in 0..n {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case);
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Real-mode integration: coordinator + worker pool + PJRT runtime over
+//! actual threads and processes.  PJRT-dependent tests self-skip when
+//! `make artifacts` has not run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use raptor::coordinator::{Coordinator, EngineKind, RaptorConfig};
+use raptor::runtime::{artifacts_built, DockEngine};
+use raptor::task::{DockCall, ExecCall, TaskDesc, TaskState};
+use raptor::workload::{calls_to_tasks, LigandLibrary};
+
+fn dock_task(uid: u64) -> TaskDesc {
+    TaskDesc::function(
+        uid,
+        DockCall {
+            library_seed: 0x7E57,
+            protein_seed: 42,
+            first_ligand_id: uid * 8,
+            bundle: 8,
+        },
+    )
+}
+
+/// Full PJRT pipeline: scores produced through the coordinator equal the
+/// scores of a directly-driven engine (routing does not corrupt results).
+#[test]
+fn coordinator_scores_match_direct_engine() {
+    if !artifacts_built() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 1,
+        bulk_size: 8,
+        engine: EngineKind::PjrtCpu,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    c.submit((0..24).map(dock_task)).unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, 24);
+    let mut engine = DockEngine::cpu().unwrap();
+    for r in &report.results {
+        let want = engine.dock(0x7E57, r.uid * 8, 42).unwrap();
+        assert_eq!(r.scores, want, "task {} scores corrupted in transit", r.uid);
+    }
+}
+
+/// A library-driven run: strided calls → tasks → results cover the whole
+/// library exactly once (no dropped or duplicated ligands).
+#[test]
+fn library_run_covers_all_ligands() {
+    let lib = LigandLibrary::tiny(1000);
+    let cfg = RaptorConfig {
+        n_workers: 3,
+        executors_per_worker: 2,
+        bulk_size: 16,
+        engine: EngineKind::Synthetic,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    c.submit(calls_to_tasks(lib.strided_calls(1, 8, 0, 1), 0)).unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    let scored: usize = report.results.iter().map(|r| r.scores.len()).sum();
+    assert_eq!(scored as u64, lib.size);
+}
+
+/// Heterogeneous real run: function + real-subprocess executable tasks,
+/// full accounting, both classes isolated.
+#[test]
+fn mixed_real_workload_accounting() {
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 2,
+        bulk_size: 8,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 0.0,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let n = 200u64;
+    c.submit((0..n).map(|i| {
+        if i % 3 == 0 {
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec!["/bin/sh".into(), "-c".into(), ":".into()],
+                    sim_duration: 0.0,
+                },
+            )
+        } else {
+            dock_task(i)
+        }
+    }))
+    .unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, n);
+    assert_eq!(report.failed, 0);
+    let exec_count = report
+        .results
+        .iter()
+        .filter(|r| r.scores.is_empty())
+        .count() as u64;
+    assert_eq!(exec_count, n.div_ceil(3));
+}
+
+/// Failure injection: broken executables are reported Failed without
+/// taking the run down; healthy tasks still complete.
+#[test]
+fn failing_tasks_isolated() {
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 1,
+        bulk_size: 4,
+        engine: EngineKind::Synthetic,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    c.submit((0..40).map(|i| {
+        if i % 4 == 0 {
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec!["/nonexistent/definitely-not-a-binary".into()],
+                    sim_duration: 0.0,
+                },
+            )
+        } else {
+            dock_task(i)
+        }
+    }))
+    .unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done + report.failed, 40);
+    assert_eq!(report.failed, 10);
+    for r in &report.results {
+        if r.uid % 4 == 0 {
+            assert_eq!(r.state, TaskState::Failed);
+        } else {
+            assert_eq!(r.state, TaskState::Done);
+        }
+    }
+}
+
+/// Backpressure: a tiny queue with many pending bulks never deadlocks and
+/// never drops tasks.
+#[test]
+fn backpressure_no_deadlock() {
+    let cfg = RaptorConfig {
+        n_workers: 1,
+        executors_per_worker: 1,
+        bulk_size: 4,
+        queue_capacity: 1, // maximal backpressure
+        engine: EngineKind::Synthetic,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    c.submit((0..500).map(dock_task)).unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, 500);
+}
+
+/// Callbacks stream results while the run is in flight (not only at the
+/// end), and submission after start is dispatched.
+#[test]
+fn streaming_callbacks_and_late_submission() {
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 2,
+        bulk_size: 4,
+        engine: EngineKind::Synthetic,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let seen = Arc::new(AtomicU64::new(0));
+    let seen2 = seen.clone();
+    c.on_result(Box::new(move |_| {
+        seen2.fetch_add(1, Ordering::SeqCst);
+    }));
+    c.submit((0..50).map(dock_task)).unwrap();
+    c.start().unwrap();
+    c.submit((50..100).map(dock_task)).unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, 100);
+    assert_eq!(seen.load(Ordering::SeqCst), 100);
+}
+
+/// GPU-bundle engine path (AutoDock analogue): 16-ligand calls complete
+/// and score deterministically.
+#[test]
+fn gpu_bundle_engine_roundtrip() {
+    if !artifacts_built() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = RaptorConfig {
+        n_workers: 1,
+        executors_per_worker: 1,
+        bulk_size: 4,
+        engine: EngineKind::PjrtGpuBundle,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    c.submit((0..8).map(|i| {
+        TaskDesc::function(
+            i,
+            DockCall {
+                library_seed: 1,
+                protein_seed: 42,
+                first_ligand_id: i * 16,
+                bundle: 16,
+            },
+        )
+    }))
+    .unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, 8);
+    for r in &report.results {
+        assert_eq!(r.scores.len(), 16);
+        assert!(r.scores.iter().all(|s| s.is_finite()));
+    }
+}
+
+/// Retry policy (§VI failure management): a flaky executable that fails
+/// on its first attempt succeeds after one retry; a permanently-broken
+/// one exhausts its budget and is reported Failed.
+#[test]
+fn retry_policy_recovers_flaky_tasks() {
+    let dir = std::env::temp_dir().join(format!("raptor_retry_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 1,
+        bulk_size: 4,
+        engine: EngineKind::Synthetic,
+        keep_results: true,
+        max_retries: 2,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let mut tasks = Vec::new();
+    for i in 0..10u64 {
+        // Flaky: fail when the marker file is absent, creating it.
+        let marker = dir.join(format!("marker_{i}"));
+        tasks.push(TaskDesc::executable(
+            i,
+            ExecCall {
+                command: vec![
+                    "/bin/sh".into(),
+                    "-c".into(),
+                    format!(
+                        "test -e {m} && exit 0; touch {m}; exit 1",
+                        m = marker.display()
+                    ),
+                ],
+                sim_duration: 0.0,
+            },
+        ));
+    }
+    // One permanently-broken task.
+    tasks.push(TaskDesc::executable(
+        99,
+        ExecCall {
+            command: vec!["/bin/false".into()],
+            sim_duration: 0.0,
+        },
+    ));
+    c.submit(tasks).unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, 10, "flaky tasks must recover via retry");
+    assert_eq!(report.failed, 1, "broken task must exhaust retries");
+    let _ = std::fs::remove_dir_all(&dir);
+}

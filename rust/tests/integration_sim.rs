@@ -1,0 +1,152 @@
+//! Campaign-level integration tests: all four paper experiments at small
+//! scale, end to end through the batch system, startup planning, the
+//! coordinator/worker overlay and the metrics pipeline.
+
+use raptor::campaign::{self, figures, table};
+
+/// Every experiment completes with exact task conservation and produces a
+/// sane measured Table-I row.
+#[test]
+fn all_experiments_complete_and_report() {
+    for (id, scale) in [(1u32, 0.003), (2, 0.01), (3, 0.02), (4, 0.02)] {
+        let mut cfg = campaign::by_id(id, scale);
+        if id == 1 {
+            cfg.pilots.truncate(6); // keep host time tiny
+        }
+        let expected = cfg.total_tasks();
+        let r = campaign::run(&cfg);
+        assert_eq!(r.total_done, expected, "exp{id}: task conservation");
+        let row = table::measured_row(&cfg, &r);
+        assert!(row.util_avg > 0.0 && row.util_avg <= 1.0, "exp{id} util_avg");
+        assert!(
+            row.util_steady >= row.util_avg * 0.8,
+            "exp{id}: steady {} should not be far below avg {}",
+            row.util_steady,
+            row.util_avg
+        );
+        assert!(row.rate_max_mh > 0.0, "exp{id} rate");
+        assert!(row.startup_s > 0.0, "exp{id} startup");
+        assert!(row.task_time_mean_s > 0.0, "exp{id} task time");
+        // Steady-state utilization is the paper's headline: ≥90%.
+        assert!(
+            row.util_steady > 0.90,
+            "exp{id}: steady utilization {} < 0.90",
+            row.util_steady
+        );
+    }
+}
+
+/// The startup ordering invariant: pilot activation < first worker ready
+/// < first task start, per pilot.
+#[test]
+fn startup_ordering() {
+    let cfg = campaign::exp4(0.02);
+    let r = campaign::run(&cfg);
+    for p in &r.pilots {
+        assert!(p.active_at >= 0.0);
+        assert!(p.startup_total_s > 0.0);
+        assert!(
+            p.first_task_s > 0.0 && p.first_task_s < p.startup_total_s + 60.0,
+            "first task {} vs startup {}",
+            p.first_task_s,
+            p.startup_total_s
+        );
+        let min_ready = p
+            .worker_ready_offsets
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            p.first_task_s >= min_ready - 1e-9,
+            "task before any worker ready: {} < {}",
+            p.first_task_s,
+            min_ready
+        );
+    }
+}
+
+/// Figure CSVs for every experiment exist and have plausible shapes.
+#[test]
+fn figures_written_for_all_experiments() {
+    let dir = std::env::temp_dir().join("raptor_integration_figs");
+    for (id, scale) in [(1u32, 0.002), (2, 0.005), (3, 0.01), (4, 0.01)] {
+        let mut cfg = campaign::by_id(id, scale);
+        if id == 1 {
+            cfg.pilots.truncate(4);
+        }
+        let r = campaign::run(&cfg);
+        figures::write_figures(id, &r, &dir).unwrap();
+    }
+    for f in [
+        "fig4a.csv", "fig4b.csv", "fig5a.csv", "fig5b.csv", "fig6a.csv", "fig6b.csv",
+        "fig6c.csv", "fig7a.csv", "fig7b_fn.csv", "fig7b_exec.csv", "fig8a_all.csv",
+        "fig8a_fn.csv", "fig8a_exec.csv", "fig8b.csv", "fig9a.csv", "fig9b.csv",
+    ] {
+        let text = std::fs::read_to_string(dir.join(f)).unwrap_or_else(|_| panic!("{f} missing"));
+        assert!(text.lines().count() > 2, "{f} nearly empty");
+    }
+}
+
+/// Exp-3 specifics: the FS stall smears runtimes past the cutoff and the
+/// two task classes complete at comparable rates (the paper's isolation
+/// claim).
+#[test]
+fn exp3_stall_and_class_parity() {
+    // Needs a large-enough scale that the startup ramp pushes work into
+    // the 800 s stall window (startup grows with worker count).
+    let cfg = campaign::exp3(0.4);
+    let r = campaign::run(&cfg);
+    let p = &r.pilots[0];
+    // Cutoff at 60s; the stall window adds up to ~220s on top.
+    let fn_max = p.metrics.fn_durations.max();
+    assert!(
+        fn_max > 61.0,
+        "stall never smeared a task past the cutoff (max {fn_max})"
+    );
+    assert!(fn_max <= 60.0 + 221.0, "smear too large: {fn_max}");
+    // Class parity: both classes fully complete, and their mean rates over
+    // the steady phase are within 2x of each other (paper Fig 8a).
+    assert_eq!(p.metrics.fn_durations.count(), cfg.pilots[0].n_fn_tasks);
+    assert_eq!(p.metrics.ex_durations.count(), cfg.pilots[0].n_ex_tasks);
+}
+
+/// Exp-1 specifics: pilot starts are staggered by queue waits and at
+/// most ~half the pilots run concurrently (the paper observed ≤13 of 31).
+#[test]
+fn exp1_pilot_concurrency_bounded() {
+    let cfg = campaign::exp1(0.01);
+    let r = campaign::run(&cfg);
+    assert_eq!(r.pilots.len(), 31);
+    // Count max overlapping [active, finished] windows.
+    let mut events: Vec<(f64, i32)> = Vec::new();
+    for p in &r.pilots {
+        events.push((p.active_at, 1));
+        events.push((p.finished_at, -1));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut cur = 0;
+    let mut peak = 0;
+    for (_, d) in events {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    assert!(
+        (5..=22).contains(&peak),
+        "peak concurrent pilots {peak}, paper saw <=13 of 31"
+    );
+}
+
+/// Determinism across the full campaign stack.
+#[test]
+fn campaigns_fully_deterministic() {
+    let cfg = campaign::exp3(0.01);
+    let a = campaign::run(&cfg);
+    let b = campaign::run(&cfg);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.total_done, b.total_done);
+    assert_eq!(a.global.makespan(), b.global.makespan());
+    assert_eq!(
+        a.pilots[0].metrics.fn_durations.mean(),
+        b.pilots[0].metrics.fn_durations.mean()
+    );
+}

@@ -1,0 +1,258 @@
+//! Property tests over the coordinator/substrate invariants: routing,
+//! batching, partitioning, state accounting — randomized inputs with
+//! deterministic, re-runnable seeds.
+
+mod common;
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use common::prop;
+use raptor::coordinator::{BulkQueue, Partition};
+use raptor::metrics::{StreamMetrics, TaskClass};
+use raptor::platform::{BatchSim, QueuePolicy, WaitShape};
+use raptor::sim::Engine;
+use raptor::workload::duration::probit;
+use raptor::workload::{DockTimeModel, LigandLibrary};
+
+/// Partition invariant: every split covers the nodes exactly once with
+/// ≤1 worker imbalance, for arbitrary (nodes, coordinators, reserve).
+#[test]
+fn prop_partition_exact_cover() {
+    prop(200, 1, |rng| {
+        let nodes = 2 + rng.next_below(10_000) as u32;
+        let reserve = rng.next_below(nodes as u64 / 2) as u32;
+        let n_coord = 1 + rng.next_below(64) as u32;
+        let p = Partition::split(nodes, n_coord, reserve);
+        p.check(nodes);
+        assert_eq!(p.n_coordinators(), n_coord);
+    });
+}
+
+/// Ligand stride invariant: for arbitrary library size, bundle and
+/// coordinator count, the strides form an exact partition of all bundles
+/// and cover every ligand exactly once.
+#[test]
+fn prop_stride_partition() {
+    prop(100, 2, |rng| {
+        let size = 1 + rng.next_below(100_000);
+        let bundle = 1 + rng.next_below(64) as u32;
+        let n_coord = 1 + rng.next_below(16) as u32;
+        let lib = LigandLibrary::tiny(size);
+        let mut seen = HashSet::new();
+        let mut covered = 0u64;
+        for c in 0..n_coord {
+            for call in lib.strided_calls(1, bundle, c, n_coord) {
+                assert!(seen.insert(call.first_ligand_id), "duplicate bundle");
+                assert!(call.first_ligand_id < size);
+                assert!(call.bundle >= 1 && call.bundle <= bundle);
+                covered += call.bundle as u64;
+            }
+        }
+        assert_eq!(covered, size, "every ligand exactly once");
+        assert_eq!(seen.len() as u64, lib.n_bundles(bundle));
+    });
+}
+
+/// Queue conservation under random concurrent producers/consumers: every
+/// pushed item is pulled exactly once.
+#[test]
+fn prop_queue_no_loss_no_dup() {
+    prop(12, 3, |rng| {
+        let producers = 1 + rng.next_below(4) as usize;
+        let consumers = 1 + rng.next_below(4) as usize;
+        let per = 200 + rng.next_below(800);
+        let bulk = 1 + rng.next_below(64) as usize;
+        let cap = 1 + rng.next_below(16) as usize;
+        let q = Arc::new(BulkQueue::new(cap));
+        let ph: Vec<_> = (0..producers)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut next = (p as u64) << 32;
+                    let mut sent = 0;
+                    while sent < per {
+                        let n = bulk.min((per - sent) as usize);
+                        q.push_bulk((next..next + n as u64).collect()).unwrap();
+                        next += n as u64;
+                        sent += n as u64;
+                    }
+                })
+            })
+            .collect();
+        let ch: Vec<_> = (0..consumers)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(b) = q.pull_bulk() {
+                        got.extend(b);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in ph {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = ch.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, producers as u64 * per, "lost or duplicated items");
+    });
+}
+
+/// Batch-system invariants under random submit/advance/finish sequences:
+/// node conservation, concurrency caps, eventual completion.
+#[test]
+fn prop_batch_sim_invariants() {
+    prop(50, 4, |rng| {
+        let total_nodes = 100 + rng.next_below(8000) as u32;
+        let policy = QueuePolicy {
+            name: "prop",
+            max_concurrent_jobs: 1 + rng.next_below(20) as u32,
+            max_nodes_per_job: total_nodes,
+            max_walltime_s: 1e6,
+            mean_external_wait_s: rng.uniform(0.0, 1000.0),
+            wait_shape: if rng.next_below(2) == 0 {
+                WaitShape::Exponential
+            } else {
+                WaitShape::Uniform
+            },
+            sched_cycle_s: 0.0,
+        };
+        let mut b = BatchSim::new(total_nodes, policy, rng.next_u64());
+        let n_jobs = 1 + rng.next_below(40) as usize;
+        let mut ids = Vec::new();
+        for _ in 0..n_jobs {
+            let nodes = 1 + rng.next_below(total_nodes as u64 / 2) as u32;
+            if let Ok(id) = b.submit(0.0, nodes, 100.0) {
+                ids.push(id);
+            }
+        }
+        let mut running: Vec<raptor::platform::JobId> = Vec::new();
+        let mut done = 0;
+        let mut t = 0.0;
+        let mut guard = 0;
+        while done < ids.len() {
+            guard += 1;
+            assert!(guard < 100_000, "batch sim did not converge");
+            t += 50.0;
+            running.extend(b.advance(t).into_iter().map(|(id, _)| id));
+            b.check_invariants();
+            // Finish a random prefix of running jobs.
+            let k = rng.next_below(running.len() as u64 + 1) as usize;
+            for id in running.drain(..k) {
+                b.finish(id);
+                done += 1;
+            }
+            b.check_invariants();
+        }
+    });
+}
+
+/// Duration model: samples respect floor/cutoff, and the sample mean
+/// converges to the configured mean for arbitrary fits.
+#[test]
+fn prop_duration_model_bounds() {
+    prop(40, 5, |rng| {
+        let mean = rng.uniform(1.0, 100.0);
+        let max = mean * rng.uniform(5.0, 200.0);
+        let n = 10_000 + rng.next_below(10_000_000);
+        let m = DockTimeModel::from_mean_max(mean, max, n).with_floor(0.1);
+        let mut sum = 0.0;
+        let k = 20_000;
+        for _ in 0..k {
+            let s = m.sample(rng);
+            assert!(s.seconds >= 0.1);
+            assert!(!s.cut_off);
+            sum += s.seconds;
+        }
+        let sample_mean = sum / k as f64;
+        assert!(
+            (sample_mean - mean).abs() / mean < 0.25,
+            "mean {mean}: sampled {sample_mean}"
+        );
+    });
+}
+
+/// Probit is monotone and symmetric: probit(1-p) == -probit(p).
+#[test]
+fn prop_probit_monotone_symmetric() {
+    prop(200, 6, |rng| {
+        let p = rng.uniform(1e-9, 1.0 - 1e-9);
+        let q = rng.uniform(1e-9, 1.0 - 1e-9);
+        let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+        if lo < hi {
+            assert!(probit(lo) <= probit(hi) + 1e-9, "not monotone at {lo}, {hi}");
+        }
+        assert!(
+            (probit(1.0 - p) + probit(p)).abs() < 1e-6,
+            "not symmetric at {p}"
+        );
+    });
+}
+
+/// Event engine: arbitrary interleavings of schedule/pop never go back in
+/// time and drain completely.
+#[test]
+fn prop_engine_time_monotone() {
+    prop(100, 7, |rng| {
+        let mut eng: Engine<u64> = Engine::new();
+        let mut scheduled = 0u64;
+        let mut popped = 0u64;
+        let mut last_t = 0.0f64;
+        for _ in 0..500 {
+            if rng.next_below(2) == 0 {
+                let dt = rng.uniform(0.0, 100.0);
+                eng.schedule_in(dt, scheduled);
+                scheduled += 1;
+            } else if let Some((t, _)) = eng.pop() {
+                assert!(t >= last_t, "time went backwards: {t} < {last_t}");
+                last_t = t;
+                popped += 1;
+            }
+        }
+        while eng.pop().is_some() {
+            popped += 1;
+        }
+        assert_eq!(scheduled, popped, "events lost in the heap");
+    });
+}
+
+/// StreamMetrics conservation: N starts + N finishes → N counted, and the
+/// concurrency integral equals the sum of durations.
+#[test]
+fn prop_stream_metrics_conservation() {
+    prop(50, 8, |rng| {
+        let mut m = StreamMetrics::new(1.0, 100.0, 20);
+        let n = 1 + rng.next_below(500);
+        // Generate random (start, duration) pairs, process events in time
+        // order (starts and finishes interleaved).
+        let mut events: Vec<(f64, bool, f64)> = Vec::new(); // (t, is_start, dur)
+        let mut total_dur = 0.0;
+        for _ in 0..n {
+            let s = rng.uniform(0.0, 50.0);
+            let d = rng.uniform(0.1, 20.0);
+            total_dur += d;
+            events.push((s, true, d));
+            events.push((s + d, false, d));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for (t, is_start, d) in events {
+            if is_start {
+                m.start(t, 1.0);
+            } else {
+                m.finish(t, d, 1.0, TaskClass::Function);
+            }
+        }
+        assert_eq!(m.total_finished(), n);
+        let conc = m.concurrency_series();
+        let integral: f64 = conc.points.iter().map(|&(_, v)| v * 1.0).sum();
+        assert!(
+            (integral - total_dur).abs() / total_dur < 0.05,
+            "concurrency integral {integral} vs total work {total_dur}"
+        );
+    });
+}

@@ -1,0 +1,68 @@
+//! Validates the scaling claim the benchmark harness relies on: rates
+//! extrapolate linearly in the node count, while durations, utilization
+//! and phase structure are scale-invariant.
+
+use raptor::campaign::{self, table};
+
+/// Doubling the scale doubles the absolute completion rate (±20%), while
+/// the *extrapolated* Table-I rate stays put.
+#[test]
+fn rates_extrapolate_linearly() {
+    let small = campaign::exp4(0.02);
+    let big = campaign::exp4(0.04);
+    let rs = campaign::run(&small);
+    let rb = campaign::run(&big);
+    let peak_s = rs.global.peak_rate();
+    let peak_b = rb.global.peak_rate();
+    let ratio = peak_b / peak_s;
+    assert!(
+        (1.6..=2.4).contains(&ratio),
+        "peak-rate ratio {ratio}, want ~2 (linear in nodes)"
+    );
+    let row_s = table::measured_row(&small, &rs);
+    let row_b = table::measured_row(&big, &rb);
+    let extrap_ratio = row_b.rate_max_mh / row_s.rate_max_mh;
+    assert!(
+        (0.8..=1.25).contains(&extrap_ratio),
+        "extrapolated rates disagree across scales: {extrap_ratio}"
+    );
+}
+
+/// Task-duration statistics are scale-invariant (same distribution!).
+#[test]
+fn durations_scale_invariant() {
+    let rs = campaign::run(&campaign::exp2(0.005));
+    let rb = campaign::run(&campaign::exp2(0.02));
+    let ms = rs.pilots[0].metrics.fn_durations.mean();
+    let mb = rb.pilots[0].metrics.fn_durations.mean();
+    assert!(
+        (ms - mb).abs() / mb < 0.05,
+        "duration means differ across scales: {ms} vs {mb}"
+    );
+}
+
+/// Steady utilization is scale-invariant within a few points.
+#[test]
+fn utilization_scale_invariant() {
+    let rs = campaign::run(&campaign::exp4(0.02));
+    let rb = campaign::run(&campaign::exp4(0.08));
+    let us = rs.pilots[0].util.steady;
+    let ub = rb.pilots[0].util.steady;
+    assert!(
+        (us - ub).abs() < 0.05,
+        "steady utilization differs: {us} vs {ub}"
+    );
+}
+
+/// Makespan is scale-invariant when nodes and tasks shrink together.
+#[test]
+fn makespan_scale_invariant() {
+    let rs = campaign::run(&campaign::exp2(0.005));
+    let rb = campaign::run(&campaign::exp2(0.02));
+    let a = rs.global.makespan();
+    let b = rb.global.makespan();
+    assert!(
+        (a - b).abs() / b < 0.35,
+        "makespans differ too much across scales: {a} vs {b} (tail variance)"
+    );
+}
