@@ -2,18 +2,24 @@
 //! tasks (PJRT docking) and executable tasks (real subprocesses) run
 //! concurrently through one coordinator, in isolation from each other.
 //!
-//!     cargo run --release --example heterogeneous_tasks
+//!     cargo run --release --example heterogeneous_tasks [pull|rr|least]
 //!
 //! The paper's claim (§IV-C): "the consistency of behavior for function
 //! and executable tasks indicates that RAPTOR can concurrently execute
 //! both types of task in isolation, without affecting overall
 //! performance."  This driver measures per-class completion rates and
-//! asserts both classes complete fully.
+//! asserts both classes complete fully.  An optional argument selects
+//! the dispatch policy (default: the paper's pull-based refill; `rr` /
+//! `least` exercise the push-pipeline ablation end to end).
 
-use raptor::coordinator::{Coordinator, EngineKind, RaptorConfig};
+use raptor::coordinator::{Coordinator, EngineKind, Policy, RaptorConfig};
 use raptor::task::{DockCall, ExecCall, TaskDesc};
 
 fn main() -> anyhow::Result<()> {
+    let policy = match std::env::args().nth(1) {
+        Some(s) => Policy::parse(&s)?,
+        None => Policy::PullBased,
+    };
     let use_pjrt = raptor::runtime::artifacts_built();
     let engine = if use_pjrt {
         EngineKind::PjrtCpu
@@ -31,10 +37,11 @@ fn main() -> anyhow::Result<()> {
         engine,
         exec_time_scale: 1.0,
         keep_results: true,
+        dispatch: policy,
         ..Default::default()
     };
     println!(
-        "heterogeneous run: {n_fn} function (docking) + {n_ex} executable (subprocess) tasks"
+        "heterogeneous run: {n_fn} function (docking) + {n_ex} executable (subprocess) tasks ({policy} dispatch)"
     );
 
     let mut c = Coordinator::new(cfg)?;

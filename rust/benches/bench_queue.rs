@@ -11,7 +11,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use raptor::campaign;
-use raptor::coordinator::BulkQueue;
+use raptor::coordinator::{BulkQueue, TaskBuffer};
 
 fn bench_real_queue(bulk: usize, total_tasks: u64) -> f64 {
     let queue: Arc<BulkQueue<u64>> = Arc::new(BulkQueue::new(64));
@@ -41,6 +41,38 @@ fn bench_real_queue(bulk: usize, total_tasks: u64) -> f64 {
     total_tasks as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Worker-local buffer handoff: one refill-style producer pushing bulks,
+/// `slots` executor-style consumers popping single tasks — the new
+/// task-granular hop between the coordinator queue and the slots.
+fn bench_task_buffer(bulk: usize, slots: usize, total_tasks: u64) -> f64 {
+    let buffer: Arc<TaskBuffer<u64>> = Arc::new(TaskBuffer::new(2 * bulk.max(slots)));
+    let t0 = Instant::now();
+    let consumers: Vec<_> = (0..slots)
+        .map(|_| {
+            let b = buffer.clone();
+            std::thread::spawn(move || {
+                let mut n = 0u64;
+                while b.pop().is_some() {
+                    n += 1;
+                }
+                n
+            })
+        })
+        .collect();
+    let mut sent = 0;
+    while sent < total_tasks {
+        let n = bulk.min((total_tasks - sent) as usize);
+        if buffer.push_many((sent..sent + n as u64).collect()).is_err() {
+            break;
+        }
+        sent += n as u64;
+    }
+    buffer.close();
+    let got: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(got, total_tasks);
+    total_tasks as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
     println!("== real BulkQueue throughput (4 consumers) ==");
     let total = 2_000_000;
@@ -48,6 +80,19 @@ fn main() {
         let rate = bench_real_queue(bulk, total);
         println!(
             "  bulk {bulk:>5}: {:>12.0} tasks/s  ({:.2} us/task)",
+            rate,
+            1e6 / rate
+        );
+    }
+
+    // The task-granular hop must not become the bottleneck: the paper
+    // needs ~40k tasks/s coordinator-wide; a worker buffer serves one
+    // worker's slots only.
+    println!("\n== worker TaskBuffer handoff (task-granular, 4 consumer slots) ==");
+    for bulk in [8usize, 32, 128, 512] {
+        let rate = bench_task_buffer(bulk, 4, 1_000_000);
+        println!(
+            "  refill bulk {bulk:>4}: {:>12.0} tasks/s  ({:.2} us/task)",
             rate,
             1e6 / rate
         );

@@ -2,21 +2,28 @@
 //!
 //!     cargo bench --bench bench_scheduler
 //!
-//! Three measurements:
+//! Four measurements:
 //! 1. real-mode RAPTOR dispatch overhead (synthetic engine: pure
 //!    coordinator/queue/worker path) — must far exceed RP's ~350 tasks/s;
-//! 2. modeled RP-only vs RAPTOR-pull makespans across task durations —
+//! 2. real-mode dispatch-policy sweep on a mixed long-tailed workload:
+//!    the seed's serial-bulk executor (re-created here as a baseline)
+//!    vs worker-local task buffers under pull / round-robin /
+//!    least-loaded dispatch;
+//! 3. modeled RP-only vs RAPTOR-pull makespans across task durations —
 //!    reproduces "performance degrades for short running tasks on large
 //!    resources" with the crossover thresholds;
-//! 3. dispatch-policy ablation (pull vs static) under the long-tail
-//!    workload.
+//! 4. dispatch-policy ablation (pull vs static) under the modeled
+//!    long-tail workload.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use raptor::baseline;
-use raptor::coordinator::{Coordinator, EngineKind, RaptorConfig};
+use raptor::coordinator::worker::synthetic_scores;
+use raptor::coordinator::{BulkQueue, Coordinator, EngineKind, Policy, RaptorConfig};
 use raptor::pilot::GlobalSchedulerModel;
-use raptor::task::{DockCall, TaskDesc};
+use raptor::task::{DockCall, ExecCall, TaskDesc, TaskKind};
+use raptor::util::rng::SplitMix64;
 use raptor::workload::DockTimeModel;
 
 fn raptor_dispatch_rate(n_tasks: u64) -> f64 {
@@ -47,6 +54,115 @@ fn raptor_dispatch_rate(n_tasks: u64) -> f64 {
     n_tasks as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Mixed long-tailed workload: mostly instant docking calls, every 4th
+/// task a synthetic-sleep executable with Pareto-distributed duration
+/// (ms scale, capped) — the shape that starves serial-bulk execution.
+fn mixed_longtail_tasks(n: u64, seed: u64) -> Vec<TaskDesc> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|i| {
+            if i % 4 == 0 {
+                TaskDesc::executable(
+                    i,
+                    ExecCall {
+                        command: vec![],
+                        sim_duration: rng.pareto(0.002, 1.2).min(0.3),
+                    },
+                )
+            } else {
+                TaskDesc::function(
+                    i,
+                    DockCall {
+                        library_seed: 1,
+                        protein_seed: 2,
+                        first_ligand_id: i * 8,
+                        bundle: 8,
+                    },
+                )
+            }
+        })
+        .collect()
+}
+
+const SWEEP_WORKERS: u32 = 4;
+const SWEEP_EXECUTORS: u32 = 2;
+const SWEEP_BULK: usize = 64;
+
+/// Run the real coordinator path under one dispatch policy.
+/// Returns (tasks/s, avg utilization).
+fn real_mode_policy(policy: Policy, tasks: Vec<TaskDesc>) -> (f64, f64) {
+    let n = tasks.len() as u64;
+    let cfg = RaptorConfig {
+        n_workers: SWEEP_WORKERS,
+        executors_per_worker: SWEEP_EXECUTORS,
+        bulk_size: SWEEP_BULK,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 1.0,
+        dispatch: policy,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    c.submit(tasks).unwrap();
+    let t0 = Instant::now();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, n);
+    (n as f64 / t0.elapsed().as_secs_f64(), report.utilization.avg)
+}
+
+/// Re-creation of the SEED executor: each slot pulls a whole bulk from
+/// the shared queue and runs it serially, so a long-tailed task blocks
+/// its queued bulk-siblings while other slots starve.
+/// Returns (tasks/s, avg utilization as busy-slot-seconds / slot-seconds).
+fn serial_bulk_baseline(tasks: Vec<TaskDesc>) -> (f64, f64) {
+    let n = tasks.len() as u64;
+    let slots = (SWEEP_WORKERS * SWEEP_EXECUTORS) as usize;
+    let queue: Arc<BulkQueue<TaskDesc>> = Arc::new(BulkQueue::new(8));
+    let t0 = Instant::now();
+    let consumers: Vec<_> = (0..slots)
+        .map(|_| {
+            let q = queue.clone();
+            std::thread::spawn(move || {
+                let mut busy = 0.0f64;
+                let mut count = 0u64;
+                while let Some(bulk) = q.pull_bulk() {
+                    for task in bulk {
+                        match &task.kind {
+                            TaskKind::Function(call) => {
+                                std::hint::black_box(synthetic_scores(call));
+                            }
+                            TaskKind::Executable(call) => {
+                                if call.sim_duration > 0.0 {
+                                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                                        call.sim_duration,
+                                    ));
+                                    busy += call.sim_duration;
+                                }
+                            }
+                        }
+                        count += 1;
+                    }
+                }
+                (busy, count)
+            })
+        })
+        .collect();
+    for chunk in tasks.chunks(SWEEP_BULK) {
+        queue.push_bulk(chunk.to_vec()).unwrap();
+    }
+    queue.close();
+    let mut busy = 0.0;
+    let mut count = 0;
+    for c in consumers {
+        let (b, k) = c.join().unwrap();
+        busy += b;
+        count += k;
+    }
+    assert_eq!(count, n);
+    let wall = t0.elapsed().as_secs_f64();
+    (n as f64 / wall, busy / (slots as f64 * wall))
+}
+
 fn main() {
     println!("== real-mode RAPTOR dispatch overhead (synthetic tasks) ==");
     let rate = raptor_dispatch_rate(400_000);
@@ -61,6 +177,27 @@ fn main() {
         sched.peak_rate(56_000),
         rate / sched.peak_rate(56_000)
     );
+
+    println!(
+        "\n== real-mode policy sweep (mixed long-tail, 2000 tasks, {SWEEP_WORKERS} workers x {SWEEP_EXECUTORS} executors, bulk {SWEEP_BULK}) =="
+    );
+    println!("  (seed baseline runs each pulled bulk serially on one slot — the head-of-line blocking the worker-local buffers remove)");
+    let (rate, util) = serial_bulk_baseline(mixed_longtail_tasks(2000, 7));
+    println!(
+        "  {:<28} {:>8.0} tasks/s   util {:>5.1}%",
+        "serial-bulk (seed executor)",
+        rate,
+        util * 100.0
+    );
+    for policy in [Policy::PullBased, Policy::RoundRobin, Policy::LeastLoaded] {
+        let (rate, util) = real_mode_policy(policy, mixed_longtail_tasks(2000, 7));
+        println!(
+            "  {:<28} {:>8.0} tasks/s   util {:>5.1}%",
+            format!("worker buffers / {policy}"),
+            rate,
+            util * 100.0
+        );
+    }
 
     println!("\n== RP-only vs RAPTOR across task durations (modeled, 56k slots = 1000 Frontera nodes) ==");
     println!("  paper: RP degrades below ~60 s tasks at ~1000 nodes");

@@ -29,9 +29,17 @@ pub struct RaptorConfig {
     pub bulk_size: usize,
     /// Max bulks buffered in the coordinator queue (backpressure bound).
     pub queue_capacity: usize,
-    /// Dispatch policy (real mode supports PullBased; others are
-    /// simulated for ablations).
-    pub policy: Policy,
+    /// How bulks travel from the coordinator queue to the workers'
+    /// task-granular local buffers:
+    /// * [`Policy::PullBased`] (paper default) — each worker runs a refill
+    ///   loop that pulls a bulk whenever `should_refill` says its local
+    ///   buffer dropped below the prefetch watermark;
+    /// * [`Policy::RoundRobin`] / [`Policy::LeastLoaded`] — a
+    ///   coordinator-side dispatcher thread pushes bulks to per-worker
+    ///   buffers (the ablation's push pipeline);
+    /// * [`Policy::Static`] — simulator-only baseline, rejected by
+    ///   [`Self::validate`] in real mode.
+    pub dispatch: Policy,
     /// Function-task engine.
     pub engine: EngineKind,
     /// Multiplier on executable-task nominal durations (tests use ~0 to
@@ -52,7 +60,7 @@ impl Default for RaptorConfig {
             executors_per_worker: 2,
             bulk_size: DEFAULT_BULK,
             queue_capacity: 8,
-            policy: Policy::PullBased,
+            dispatch: Policy::PullBased,
             engine: EngineKind::Synthetic,
             exec_time_scale: 1.0,
             keep_results: false,
@@ -67,6 +75,14 @@ impl RaptorConfig {
         self.n_workers * self.executors_per_worker
     }
 
+    /// Bound on one worker's task-granular local buffer: room for the
+    /// in-service bulk plus one prefetched bulk (double buffering), and
+    /// never less than two tasks per executor slot so the refill
+    /// hysteresis (`should_refill`) has headroom above its watermark.
+    pub fn worker_buffer_capacity(&self) -> usize {
+        (2 * self.bulk_size).max(2 * self.executors_per_worker as usize)
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.n_workers > 0, "need at least one worker");
         anyhow::ensure!(self.executors_per_worker > 0, "need executor slots");
@@ -75,6 +91,10 @@ impl RaptorConfig {
         anyhow::ensure!(
             self.exec_time_scale >= 0.0,
             "exec_time_scale must be non-negative"
+        );
+        anyhow::ensure!(
+            self.dispatch != Policy::Static,
+            "static assignment is a simulator-only baseline; real mode needs a dynamic dispatch policy"
         );
         Ok(())
     }
@@ -92,14 +112,53 @@ mod tests {
 
     #[test]
     fn invalid_configs_rejected() {
-        let mut c = RaptorConfig::default();
-        c.n_workers = 0;
+        let c = RaptorConfig {
+            n_workers: 0,
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
-        let mut c = RaptorConfig::default();
-        c.bulk_size = 0;
+        let c = RaptorConfig {
+            bulk_size: 0,
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
-        let mut c = RaptorConfig::default();
-        c.exec_time_scale = -1.0;
+        let c = RaptorConfig {
+            exec_time_scale: -1.0,
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
+        let c = RaptorConfig {
+            dispatch: Policy::Static,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err(), "static dispatch is sim-only");
+    }
+
+    #[test]
+    fn live_dispatch_policies_validate() {
+        for policy in [Policy::PullBased, Policy::RoundRobin, Policy::LeastLoaded] {
+            let cfg = RaptorConfig {
+                dispatch: policy,
+                ..Default::default()
+            };
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn buffer_capacity_covers_double_buffering() {
+        let cfg = RaptorConfig {
+            bulk_size: 128,
+            executors_per_worker: 4,
+            ..Default::default()
+        };
+        assert_eq!(cfg.worker_buffer_capacity(), 256);
+        // Tiny bulks: the slot floor takes over.
+        let cfg = RaptorConfig {
+            bulk_size: 1,
+            executors_per_worker: 8,
+            ..Default::default()
+        };
+        assert_eq!(cfg.worker_buffer_capacity(), 16);
     }
 }

@@ -13,10 +13,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::metrics::{utilization, Timeline, Utilization};
-use crate::task::{TaskDesc, TaskResult, TaskState};
+use crate::task::{TaskDesc, TaskResult, TaskState, NO_WORKER};
 
 use super::config::RaptorConfig;
-use super::queue::BulkQueue;
+use super::queue::{BulkQueue, TryPushError};
 use super::worker::WorkerPool;
 
 /// Result-callback type (the paper's status callbacks).
@@ -114,11 +114,11 @@ impl Coordinator {
         anyhow::ensure!(self.phase == Phase::Created, "already started");
         self.t0 = Instant::now();
         let results_tx = self.results_tx.take().unwrap();
+        // The feeder holds its own result sender: tasks the closed queue
+        // refuses surface as Canceled instead of silently vanishing.
+        let feeder_tx = results_tx.clone();
         self.pool = Some(WorkerPool::spawn(
-            self.cfg.n_workers,
-            self.cfg.executors_per_worker,
-            self.cfg.engine,
-            self.cfg.exec_time_scale,
+            &self.cfg,
             self.queue.clone(),
             results_tx,
             self.t0,
@@ -126,21 +126,40 @@ impl Coordinator {
         // Bulk feeder: drains the submission channel into bulks.  The
         // queue stays open after drain: `join` may still push retries and
         // closes it once every task has reached a terminal state.
+        //
+        // Conservation: once the queue refuses a push (closed by `stop`),
+        // the refused bulk AND every later-submitted task — including the
+        // final partial bulk — are reported Canceled through `feeder_tx`,
+        // so `submitted == done + failed + canceled` still balances and
+        // `join` converges by counting rather than by channel disconnect.
         let rx = self.submit_rx.take().unwrap();
         let queue = self.queue.clone();
         let bulk_size = self.cfg.bulk_size;
+        let t0 = self.t0;
         self.feeder = Some(std::thread::spawn(move || {
             let mut bulk = Vec::with_capacity(bulk_size);
+            // Tasks the queue refused: terminal-Canceled, never dropped.
+            let mut dropped: Vec<TaskDesc> = Vec::new();
             while let Ok(task) = rx.recv() {
+                if !dropped.is_empty() {
+                    dropped.push(task);
+                    continue;
+                }
                 bulk.push(task);
                 if bulk.len() >= bulk_size {
-                    if queue.push_bulk(std::mem::take(&mut bulk)).is_err() {
-                        return; // canceled
+                    if let Err(refused) = queue.push_bulk(std::mem::take(&mut bulk)) {
+                        dropped = refused;
                     }
                 }
             }
-            if !bulk.is_empty() {
-                let _ = queue.push_bulk(bulk);
+            if dropped.is_empty() && !bulk.is_empty() {
+                if let Err(refused) = queue.push_bulk(std::mem::take(&mut bulk)) {
+                    dropped = refused;
+                }
+            }
+            let now = t0.elapsed().as_secs_f64();
+            for task in dropped {
+                let _ = feeder_tx.send(TaskResult::canceled(task.uid, now, NO_WORKER));
             }
         }));
         self.phase = Phase::Started;
@@ -149,55 +168,127 @@ impl Coordinator {
 
     /// Wait for every submitted task to reach a terminal state; tear the
     /// overlay down and report.
+    ///
+    /// Conservation contract: `done + failed + canceled == submitted`.
+    /// Every submitted task produces exactly one terminal result — from an
+    /// executor, from the feeder (queue refused it after `stop`), or from
+    /// the retry bookkeeping below (retry impossible after `stop`).
     pub fn join(&mut self) -> anyhow::Result<RunReport> {
         anyhow::ensure!(self.phase == Phase::Started, "not started");
         // No more submissions: dropping the sender lets the feeder drain.
         drop(self.submit_tx.take());
 
+        /// Terminal-state accounting shared by the receive loop and the
+        /// abandoned-retry paths.
+        struct Acc {
+            received: u64,
+            done: u64,
+            failed: u64,
+            canceled: u64,
+            first_task: f64,
+            timeline: Timeline,
+            results: Vec<TaskResult>,
+            keep: bool,
+        }
+        impl Acc {
+            fn terminal(
+                &mut self,
+                r: TaskResult,
+                callback: &mut Option<ResultCallback>,
+            ) -> anyhow::Result<()> {
+                self.received += 1;
+                match r.state {
+                    TaskState::Done => self.done += 1,
+                    TaskState::Failed => self.failed += 1,
+                    TaskState::Canceled => self.canceled += 1,
+                    s => anyhow::bail!("non-terminal result state {s:?}"),
+                }
+                self.first_task = self.first_task.min(r.started);
+                self.timeline.record(r.started, r.finished, 1.0);
+                if let Some(cb) = callback {
+                    cb(&r);
+                }
+                if self.keep {
+                    self.results.push(r);
+                }
+                Ok(())
+            }
+        }
+
         let rx = self.results_rx.take().unwrap();
         let expected = || self.submitted.load(Ordering::SeqCst);
-        let mut timeline = Timeline::new();
-        let mut results = Vec::new();
-        let (mut done, mut failed, mut canceled) = (0u64, 0u64, 0u64);
-        let mut first_task = f64::INFINITY;
-        let mut received = 0u64;
+        let mut acc = Acc {
+            received: 0,
+            done: 0,
+            failed: 0,
+            canceled: 0,
+            first_task: f64::INFINITY,
+            timeline: Timeline::new(),
+            results: Vec::new(),
+            keep: self.cfg.keep_results,
+        };
         // Retry bookkeeping (failure-management policy): uid -> attempts.
         let mut attempts: std::collections::HashMap<crate::task::TaskId, u32> =
             std::collections::HashMap::new();
-        while received < expected() {
+        // Failed results awaiting resubmission, paired with the task to
+        // resubmit (cloned out of the failed result exactly once).
+        // Retries are flushed as ONE bulk with a non-blocking push: this
+        // thread is the result collector, and a blocking push against a
+        // full queue would stall the draining that makes the queue empty
+        // out — while also pushing one single-task bulk per failure
+        // through the bounded queue (the seed behavior) burns queue slots.
+        let mut retry_buf: Vec<(TaskResult, TaskDesc)> = Vec::new();
+        while acc.received < expected() {
+            if !retry_buf.is_empty() {
+                let (results, tasks): (Vec<TaskResult>, Vec<TaskDesc>) =
+                    retry_buf.drain(..).unzip();
+                match self.queue.try_push_bulk(tasks) {
+                    Ok(()) => {}
+                    // Queue saturated: workers are pulling, so more results
+                    // (and another flush chance) are on the way.  The push
+                    // hands the bulk back; re-pair it for the next attempt.
+                    Err(TryPushError::Full(tasks)) => {
+                        retry_buf = results.into_iter().zip(tasks).collect();
+                    }
+                    // Queue closed by `stop`: the retry can never run, so
+                    // the buffered failure is the terminal outcome.
+                    Err(TryPushError::Closed(_)) => {
+                        for r in results {
+                            acc.terminal(r, &mut self.callback)?;
+                        }
+                    }
+                }
+                if acc.received >= expected() {
+                    break;
+                }
+            }
             let r = match rx.recv() {
                 Ok(r) => r,
                 Err(_) => break, // all workers gone
             };
-            // Failed task with retry budget left: resubmit instead of
-            // counting it as terminal.
-            if r.state == TaskState::Failed && self.cfg.max_retries > 0 {
-                if let Some(task) = &r.failed_task {
-                    let n = attempts.entry(r.uid).or_insert(0);
-                    if *n < self.cfg.max_retries {
-                        *n += 1;
-                        log::info!("retrying task {} (attempt {})", r.uid, *n + 1);
-                        if self.queue.push_bulk(vec![(**task).clone()]).is_ok() {
-                            continue; // not terminal yet
-                        }
-                    }
+            // Failed task with retry budget left: buffer for resubmission
+            // instead of counting it as terminal.
+            let retryable = r.state == TaskState::Failed && r.failed_task.is_some();
+            if retryable && self.cfg.max_retries > 0 {
+                let n = attempts.entry(r.uid).or_insert(0);
+                if *n < self.cfg.max_retries {
+                    *n += 1;
+                    log::info!("retrying task {} (attempt {})", r.uid, *n + 1);
+                    let task = r
+                        .failed_task
+                        .as_deref()
+                        .cloned()
+                        .expect("retry result retains its task");
+                    retry_buf.push((r, task));
+                    continue; // not terminal yet
                 }
             }
-            received += 1;
-            match r.state {
-                TaskState::Done => done += 1,
-                TaskState::Failed => failed += 1,
-                TaskState::Canceled => canceled += 1,
-                s => anyhow::bail!("non-terminal result state {s:?}"),
-            }
-            first_task = first_task.min(r.started);
-            timeline.record(r.started, r.finished, 1.0);
-            if let Some(cb) = &mut self.callback {
-                cb(&r);
-            }
-            if self.cfg.keep_results {
-                results.push(r);
-            }
+            acc.terminal(r, &mut self.callback)?;
+        }
+        // Disconnect fallback: if the channel died with retries still
+        // buffered, their stored failures are the terminal outcomes.
+        for (r, _) in retry_buf.drain(..) {
+            acc.terminal(r, &mut self.callback)?;
         }
         // Every task is terminal: release the workers.
         self.queue.close();
@@ -209,22 +300,26 @@ impl Coordinator {
         }
         self.phase = Phase::Finished;
         let wall_s = self.t0.elapsed().as_secs_f64();
-        let util = utilization(&timeline, self.cfg.capacity() as f64, Some(wall_s));
+        let util = utilization(&acc.timeline, self.cfg.capacity() as f64, Some(wall_s));
         let rate = if wall_s > 0.0 {
-            done as f64 / wall_s
+            acc.done as f64 / wall_s
         } else {
             0.0
         };
         Ok(RunReport {
-            done,
-            failed,
-            canceled,
+            done: acc.done,
+            failed: acc.failed,
+            canceled: acc.canceled,
             wall_s,
-            first_task_s: if first_task.is_finite() { first_task } else { 0.0 },
-            timeline,
+            first_task_s: if acc.first_task.is_finite() {
+                acc.first_task
+            } else {
+                0.0
+            },
+            timeline: acc.timeline,
             utilization: util,
             rate_per_s: rate,
-            results,
+            results: acc.results,
         })
     }
 
@@ -235,9 +330,18 @@ impl Coordinator {
         if let Some(p) = &self.pool {
             p.cancel();
         }
-        // After cancel, workers drain every queued bulk as Canceled, so
-        // join's accounting still converges.
+        // After cancel, workers drain every queued bulk as Canceled, the
+        // feeder reports queue-refused tasks as Canceled, and buffered
+        // retries resolve to Failed, so join's accounting converges to
+        // exactly `submitted` terminal results.
         self.join()
+    }
+
+    /// (tasks pushed, tasks pulled) on the coordinator bulk queue.  After
+    /// a completed `join`/`stop` the two are equal: the refill/dispatch
+    /// threads drain the queue even under cancellation.
+    pub fn queue_counts(&self) -> (u64, u64) {
+        self.queue.counts()
     }
 }
 
@@ -337,6 +441,7 @@ mod tests {
             bulk_size: 4,
             exec_time_scale: 1.0,
             queue_capacity: 1000,
+            keep_results: true,
             ..Default::default()
         })
         .unwrap();
@@ -355,7 +460,80 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(100));
         let report = c.stop().unwrap();
         assert!(report.canceled > 0, "nothing canceled");
+        // Exact conservation: every submitted task reached exactly one
+        // terminal state — no undercount from feeder-dropped bulks.
         assert_eq!(report.done + report.failed + report.canceled, 100);
+        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(uids, (0..100).collect::<Vec<u64>>(), "one result per task");
+        let (pushed, pulled) = c.queue_counts();
+        assert_eq!(pushed, pulled, "queue drained even under stop");
+    }
+
+    #[test]
+    fn stop_with_queue_backpressure_conserves_tasks() {
+        // Tiny queue + slow worker: stop() lands while the feeder is
+        // still blocked pushing, so its in-flight bulk is refused and
+        // must surface as Canceled (the seed dropped those silently and
+        // undercounted `submitted`).
+        let mut c = Coordinator::new(RaptorConfig {
+            n_workers: 1,
+            executors_per_worker: 1,
+            bulk_size: 4,
+            exec_time_scale: 1.0,
+            queue_capacity: 1,
+            keep_results: true,
+            ..Default::default()
+        })
+        .unwrap();
+        c.submit((0..200).map(|i| {
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec![],
+                    sim_duration: 0.02,
+                },
+            )
+        }))
+        .unwrap();
+        c.start().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let report = c.stop().unwrap();
+        assert_eq!(report.done + report.failed + report.canceled, 200);
+        assert!(report.canceled > 0);
+        // Some tasks never reached a worker: the feeder canceled them.
+        assert!(
+            report
+                .results
+                .iter()
+                .any(|r| r.state == TaskState::Canceled && r.worker == crate::task::NO_WORKER),
+            "feeder-refused tasks must surface as Canceled"
+        );
+    }
+
+    #[test]
+    fn push_policy_coordinator_roundtrip() {
+        for policy in [
+            crate::coordinator::Policy::RoundRobin,
+            crate::coordinator::Policy::LeastLoaded,
+        ] {
+            let cfg = RaptorConfig {
+                n_workers: 3,
+                executors_per_worker: 2,
+                bulk_size: 8,
+                dispatch: policy,
+                keep_results: true,
+                ..Default::default()
+            };
+            let mut c = Coordinator::new(cfg).unwrap();
+            c.submit((0..200).map(fn_task)).unwrap();
+            c.start().unwrap();
+            let report = c.join().unwrap();
+            assert_eq!(report.done, 200, "policy {policy}");
+            let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+            uids.sort_unstable();
+            assert_eq!(uids, (0..200).collect::<Vec<u64>>());
+        }
     }
 
     #[test]

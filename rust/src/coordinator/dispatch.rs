@@ -23,6 +23,38 @@ pub enum Policy {
     Static,
 }
 
+impl Policy {
+    /// Stable lowercase name (CLI values, bench labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::PullBased => "pull",
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::Static => "static",
+        }
+    }
+
+    /// Parse a CLI spelling (`--policy pull|round-robin|least-loaded|static`,
+    /// with the common short forms accepted).
+    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "pull" | "pull-based" | "pullbased" => Ok(Policy::PullBased),
+            "rr" | "round-robin" | "roundrobin" => Ok(Policy::RoundRobin),
+            "least" | "least-loaded" | "leastloaded" => Ok(Policy::LeastLoaded),
+            "static" => Ok(Policy::Static),
+            other => anyhow::bail!(
+                "unknown dispatch policy {other:?} (want pull, round-robin, least-loaded or static)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Mutable dispatcher state for the push policies.
 #[derive(Debug, Clone)]
 pub struct Dispatcher {
@@ -117,6 +149,21 @@ mod tests {
             hits[d.choose(&[2, 2, 7])] += 1;
         }
         assert!(hits[0] > 300 && hits[1] > 300, "{hits:?}");
+    }
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for p in [
+            Policy::PullBased,
+            Policy::RoundRobin,
+            Policy::LeastLoaded,
+            Policy::Static,
+        ] {
+            assert_eq!(Policy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("least").unwrap(), Policy::LeastLoaded);
+        assert!(Policy::parse("bogus").is_err());
     }
 
     #[test]

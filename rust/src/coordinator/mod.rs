@@ -1,15 +1,68 @@
 //! RAPTOR: the coordinator/worker task overlay (the paper's contribution).
 //!
+//! # Two-level dispatch architecture (real mode)
+//!
+//! Tasks move through two queues of different granularity:
+//!
+//! ```text
+//!  submit() ─▶ feeder ─▶ BulkQueue ──────▶ per-worker TaskBuffer ─▶ executor slots
+//!             (batches    (bounded,         (bounded, task-          (each owns its
+//!              into       bulk-granular,     granular, shared         PJRT engine)
+//!              bulks)      ZeroMQ stand-in)   by the worker's slots)
+//! ```
+//!
+//! * **Coordinator → worker** transfers happen in *bulks* (§III design
+//!   choice 5, default 128 tasks) to amortize queue operations;
+//! * **worker → executor slot** handoff is *task-granular*: the worker's
+//!   slots share its [`worker::TaskBuffer`], so a long-tailed task holds
+//!   one slot while the rest of its bulk keeps flowing — bulked
+//!   transport without bulk-serial execution.
+//!
+//! How bulks reach the worker buffers is the [`Policy`] ablation:
+//!
+//! * [`Policy::PullBased`] (paper production config): each worker runs a
+//!   refill loop that pulls the next bulk when its buffer falls below
+//!   the [`dispatch::should_refill`] watermark (`max(bulk/2, slots)` —
+//!   prefetch hysteresis that hides queue latency like double
+//!   buffering);
+//! * [`Policy::RoundRobin`] / [`Policy::LeastLoaded`]: a coordinator
+//!   dispatcher thread *pushes* each bulk to a worker chosen by the
+//!   [`dispatch::Dispatcher`], using buffered task counts as the load
+//!   signal (EXSCALATE-style push pipeline, for comparison);
+//! * [`Policy::Static`]: simulator-only baseline (VirtualFlow-like);
+//!   rejected by `RaptorConfig::validate` in real mode.
+//!
+//! # Task conservation
+//!
+//! The overlay guarantees `submitted == done + failed + canceled` as a
+//! structural invariant: every task handed to `submit` produces exactly
+//! one terminal [`crate::task::TaskResult`] —
+//!
+//! * executed tasks report `Done`/`Failed` from their executor slot;
+//! * on `stop()`, executors drain buffered tasks as `Canceled`, the
+//!   refill/dispatch threads drain the closed `BulkQueue` into the
+//!   buffers (so queue `pushed == pulled` always holds after teardown),
+//!   and the feeder reports tasks the closed queue refused — including
+//!   the final partial bulk — as `Canceled`;
+//! * failed tasks with retry budget are resubmitted in batched bulks via
+//!   a non-blocking push from `join`'s collector loop; when the queue is
+//!   closed before the flush succeeds, the buffered failure is counted
+//!   as the terminal `Failed` outcome.
+//!
+//! `tests/prop_invariants.rs` exercises this invariant over randomized
+//! submit/start/stop interleavings, policies, failures and retries.
+//!
+//! # Modules
+//!
 //! * [`coordinator::Coordinator`] — real-mode coordinator with the paper's
 //!   `submit` / `start` / `join` / `stop` API;
-//! * [`worker::WorkerPool`] — executor slots pulling task bulks, each slot
-//!   owning its PJRT engine;
+//! * [`worker::WorkerPool`] — per-worker task buffers + executor slots,
+//!   each slot owning its PJRT engine;
 //! * [`queue::BulkQueue`] — the bounded bulk MPMC queue (ZeroMQ stand-in)
 //!   and its simulator rate model;
 //! * [`partition::Partition`] — node partitioning across coordinators
 //!   (§III design choice 3);
-//! * [`dispatch`] — pull-based balancing plus push/static policies for
-//!   ablations.
+//! * [`dispatch`] — the dispatch policies and the refill hysteresis.
 
 pub mod config;
 #[allow(clippy::module_inception)]
@@ -21,7 +74,7 @@ pub mod worker;
 
 pub use config::{EngineKind, RaptorConfig};
 pub use coordinator::{Coordinator, ResultCallback, RunReport};
-pub use dispatch::{Policy, DEFAULT_BULK};
+pub use dispatch::{should_refill, Dispatcher, Policy, DEFAULT_BULK, REFILL_FRACTION};
 pub use partition::Partition;
-pub use queue::{BulkQueue, QueueModel};
-pub use worker::WorkerPool;
+pub use queue::{BulkQueue, QueueModel, TryPushError};
+pub use worker::{TaskBuffer, WorkerPool, MAX_SYNTHETIC_SLEEP_S};

@@ -17,6 +17,16 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+/// Why a [`BulkQueue::try_push_bulk`] was refused; the bulk is handed
+/// back so no task is ever dropped on a failed push.
+#[derive(Debug)]
+pub enum TryPushError<T> {
+    /// The queue is at capacity right now; retry later.
+    Full(Vec<T>),
+    /// The queue was closed; the tasks can never be delivered.
+    Closed(Vec<T>),
+}
+
 /// Bounded blocking MPMC queue of bulks.
 pub struct BulkQueue<T> {
     inner: Mutex<Inner<T>>,
@@ -64,6 +74,24 @@ impl<T> BulkQueue<T> {
             }
             g = self.not_full.wait(g).unwrap();
         }
+    }
+
+    /// Non-blocking push: never waits on a full queue.  Used by the
+    /// result collector to flush buffered retries — a blocking push there
+    /// would stall result draining against a full queue (deadlock risk:
+    /// the queue only drains because results keep being collected).
+    pub fn try_push_bulk(&self, bulk: Vec<T>) -> Result<(), TryPushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(TryPushError::Closed(bulk));
+        }
+        if g.bulks.len() >= self.capacity {
+            return Err(TryPushError::Full(bulk));
+        }
+        g.pushed += bulk.len() as u64;
+        g.bulks.push_back(bulk);
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Pull one bulk; blocks until available or closed-and-drained.
@@ -186,6 +214,24 @@ mod tests {
         assert!(q.push_bulk(vec![2]).is_err());
         assert_eq!(q.pull_bulk(), Some(vec![1]));
         assert_eq!(q.pull_bulk(), None);
+    }
+
+    #[test]
+    fn try_push_full_and_closed() {
+        let q = BulkQueue::new(1);
+        q.try_push_bulk(vec![1]).unwrap();
+        match q.try_push_bulk(vec![2, 3]) {
+            Err(TryPushError::Full(b)) => assert_eq!(b, vec![2, 3]),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        q.close();
+        match q.try_push_bulk(vec![4]) {
+            Err(TryPushError::Closed(b)) => assert_eq!(b, vec![4]),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // The accepted bulk still drains; the refused ones never counted.
+        assert_eq!(q.pull_bulk(), Some(vec![1]));
+        assert_eq!(q.counts(), (1, 1));
     }
 
     #[test]

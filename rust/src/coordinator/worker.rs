@@ -1,21 +1,172 @@
-//! Real-mode RAPTOR worker: one (simulated) node's executor pool.
+//! Real-mode RAPTOR worker: one (simulated) node's executor pool, built
+//! as the paper's two-level dispatch design.
 //!
-//! A worker pulls task *bulks* from its coordinator's queue and fans the
-//! tasks out to its executor slots.  Each executor thread owns its PJRT
-//! engine (the paper's per-worker environment bootstrap — OpenEye venv on
-//! node-local SSD — becomes the per-thread artifact compile here).
+//! ```text
+//!   coordinator BulkQueue ──(bulk granularity)──▶ per-worker TaskBuffer
+//!        │                                            │
+//!        │  PullBased: worker refill loop pulls a     │ (task granularity)
+//!        │  bulk when `should_refill` hits the        ▼
+//!        │  prefetch watermark                  executor slots
+//!        │  RoundRobin/LeastLoaded: coordinator  (each owns its PJRT
+//!        │  dispatcher thread pushes to chosen    engine)
+//!        │  worker                 ▲
+//!        └──────────────────────────┘
+//! ```
+//!
+//! Tasks travel between coordinator and workers in *bulks* (design
+//! choice 5), but execute at *task* granularity: a worker's executor
+//! slots share the worker's bounded [`TaskBuffer`], so one long-tailed
+//! task occupies one slot while its bulk-siblings keep flowing to the
+//! other slots.  (The seed implementation ran each pulled bulk serially
+//! on one executor thread, which is exactly the head-of-line blocking
+//! the paper's dynamic dispatch exists to avoid.)
+//!
+//! Every task handed to a worker produces exactly one terminal
+//! [`TaskResult`] — including across cancellation, where queued work is
+//! drained as `Canceled` rather than dropped.  That conservation
+//! invariant (`submitted == done + failed + canceled`) is what the
+//! coordinator's accounting builds on.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::runtime::DockEngine;
 use crate::task::{TaskDesc, TaskKind, TaskResult, TaskState};
 use crate::util::rng::SplitMix64;
 
-use super::config::EngineKind;
+use super::config::{EngineKind, RaptorConfig};
+use super::dispatch::{should_refill, Dispatcher, Policy};
 use super::queue::BulkQueue;
+
+/// Synthetic executable tasks (`command == []`) sleep for their scaled
+/// `sim_duration`, silently clamped to this many seconds.  The clamp is a
+/// real-time guard: simulator workloads carry multi-hundred-second
+/// nominal durations, and an unscaled config must not wedge an executor
+/// slot for that long in wall-clock time.  Scale durations with
+/// `RaptorConfig::exec_time_scale` instead of relying on the clamp.
+pub const MAX_SYNTHETIC_SLEEP_S: f64 = 10.0;
+
+/// A worker's bounded, task-granular local buffer, shared by its
+/// executor slots (and filled by a refill loop or the coordinator's
+/// dispatcher, depending on the dispatch policy).
+///
+/// Semantics:
+/// * [`push_many`](Self::push_many) admits a whole bulk once *any*
+///   capacity is free (temporary overshoot beats deadlocking on bulks
+///   larger than the buffer) and blocks while full;
+/// * [`pop`](Self::pop) hands out one task, blocking until a task is
+///   available or the buffer is closed and drained;
+/// * closing wakes every waiter; a rejected `push_many` returns the
+///   tasks so the caller can account for them.
+pub struct TaskBuffer<T> {
+    inner: Mutex<BufInner<T>>,
+    /// Executors wait here for tasks.
+    not_empty: Condvar,
+    /// Pushers (dispatcher thread) wait here for capacity.
+    not_full: Condvar,
+    /// The worker's refill loop waits here for the low watermark.
+    low: Condvar,
+    capacity: usize,
+}
+
+struct BufInner<T> {
+    tasks: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> TaskBuffer<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Mutex::new(BufInner {
+                tasks: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            low: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Append a bulk of tasks; blocks while the buffer is full.  Returns
+    /// `Err(tasks)` if the buffer is closed (nothing was enqueued).
+    pub fn push_many(&self, tasks: Vec<T>) -> Result<(), Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(tasks);
+            }
+            if g.tasks.len() < self.capacity {
+                g.tasks.extend(tasks);
+                self.not_empty.notify_all();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Take one task; blocks until available.  `None` once the buffer is
+    /// closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(task) = g.tasks.pop_front() {
+                self.not_full.notify_one();
+                self.low.notify_one();
+                return Some(task);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Block until the buffer needs a refill (`should_refill` watermark),
+    /// the pool is canceling (drain fast, skip the hysteresis), or the
+    /// buffer is closed.  Returns `false` exactly when closed.
+    pub fn wait_refill(&self, slots: usize, bulk: usize, cancel: &AtomicBool) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return false;
+            }
+            if cancel.load(Ordering::SeqCst) || should_refill(g.tasks.len(), slots, bulk) {
+                return true;
+            }
+            g = self.low.wait(g).unwrap();
+        }
+    }
+
+    /// Close: pops drain then return `None`; pushes fail.  Wakes all
+    /// waiters.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+        self.low.notify_all();
+    }
+
+    /// Wake a refill loop parked on the watermark (used by cancel so the
+    /// drain starts immediately instead of at the next pop).
+    fn interrupt_refill(&self) {
+        self.low.notify_all();
+    }
+
+    /// Currently buffered task count (the push policies' load signal).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Shared handle the coordinator uses to control its workers.
 pub struct WorkerPool {
@@ -24,62 +175,115 @@ pub struct WorkerPool {
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Executors that finished their engine bootstrap.
     pub ready: Arc<AtomicU64>,
+    buffers: Vec<Arc<TaskBuffer<TaskDesc>>>,
 }
 
 impl WorkerPool {
-    /// Spawn `n_workers * executors_per_worker` executor threads.
+    /// Spawn the overlay's worker side:
+    /// `n_workers * executors_per_worker` executor threads sharing
+    /// per-worker task buffers, plus the dispatch machinery the policy
+    /// needs (one refill thread per worker for [`Policy::PullBased`], a
+    /// single dispatcher thread for the push policies).
+    ///
+    /// Panics on [`Policy::Static`], which only exists for the simulator
+    /// ablations (`RaptorConfig::validate` rejects it before this).
     pub fn spawn(
-        n_workers: u32,
-        executors_per_worker: u32,
-        engine: EngineKind,
-        exec_time_scale: f64,
+        cfg: &RaptorConfig,
         queue: Arc<BulkQueue<TaskDesc>>,
         results: Sender<TaskResult>,
         t0: Instant,
     ) -> Self {
         let cancel = Arc::new(AtomicBool::new(false));
         let ready = Arc::new(AtomicU64::new(0));
+        let slots = cfg.executors_per_worker as usize;
+        let buffers: Vec<Arc<TaskBuffer<TaskDesc>>> = (0..cfg.n_workers)
+            .map(|_| Arc::new(TaskBuffer::new(cfg.worker_buffer_capacity())))
+            .collect();
         let mut handles = Vec::new();
-        for w in 0..n_workers {
-            for e in 0..executors_per_worker {
-                let queue = queue.clone();
+
+        for w in 0..cfg.n_workers {
+            let buffer = buffers[w as usize].clone();
+            for e in 0..cfg.executors_per_worker {
+                let buffer = buffer.clone();
                 let results = results.clone();
                 let cancel = cancel.clone();
                 let ready = ready.clone();
-                let name = format!("raptor-w{w}e{e}");
+                let engine = cfg.engine;
+                let scale = cfg.exec_time_scale;
                 let handle = std::thread::Builder::new()
-                    .name(name)
+                    .name(format!("raptor-w{w}e{e}"))
                     .spawn(move || {
-                        executor_loop(
-                            w,
-                            engine,
-                            exec_time_scale,
-                            &queue,
-                            &results,
-                            &cancel,
-                            &ready,
-                            t0,
-                        );
+                        executor_loop(w, engine, scale, &buffer, &results, &cancel, &ready, t0);
                     })
                     .expect("spawning executor thread");
                 handles.push(handle);
             }
         }
+
+        match cfg.dispatch {
+            Policy::PullBased => {
+                for w in 0..cfg.n_workers {
+                    let queue = queue.clone();
+                    let buffer = buffers[w as usize].clone();
+                    let results = results.clone();
+                    let cancel = cancel.clone();
+                    let bulk = cfg.bulk_size;
+                    let handle = std::thread::Builder::new()
+                        .name(format!("raptor-w{w}-refill"))
+                        .spawn(move || {
+                            refill_loop(w, &queue, &buffer, slots, bulk, &cancel, &results, t0);
+                        })
+                        .expect("spawning refill thread");
+                    handles.push(handle);
+                }
+            }
+            Policy::RoundRobin | Policy::LeastLoaded => {
+                let queue = queue.clone();
+                let bufs = buffers.clone();
+                let results = results.clone();
+                let seed = 0x0D15_7A7C_4E57u64 ^ cfg.n_workers as u64;
+                let dispatcher = Dispatcher::new(cfg.dispatch, seed);
+                let handle = std::thread::Builder::new()
+                    .name("raptor-dispatch".to_string())
+                    .spawn(move || {
+                        dispatch_loop(&queue, &bufs, dispatcher, &results, t0);
+                    })
+                    .expect("spawning dispatcher thread");
+                handles.push(handle);
+            }
+            Policy::Static => {
+                panic!("static assignment is a simulator-only baseline, not a real-mode policy")
+            }
+        }
+
         Self {
             queue,
             cancel,
             handles,
             ready,
+            buffers,
         }
     }
 
-    /// Request cancellation: in-flight bulks are drained as Canceled.
+    /// Request cancellation: executors short-circuit remaining tasks as
+    /// `Canceled`, and the refill/dispatch threads drain the coordinator
+    /// queue into the buffers so every queued task still reaches a
+    /// terminal state.
     pub fn cancel(&self) {
         self.cancel.store(true, Ordering::SeqCst);
         self.queue.close();
+        for b in &self.buffers {
+            b.interrupt_refill();
+        }
     }
 
-    /// Join all executor threads (queue must be closed first).
+    /// Buffered task count per worker (load observability; the push
+    /// dispatcher uses the same signal internally).
+    pub fn buffered(&self) -> Vec<u64> {
+        self.buffers.iter().map(|b| b.len() as u64).collect()
+    }
+
+    /// Join all pool threads (queue must be closed first).
     pub fn join(self) {
         for h in self.handles {
             let _ = h.join();
@@ -87,12 +291,83 @@ impl WorkerPool {
     }
 }
 
+/// Pull-based refill (the paper's production configuration): keep the
+/// worker's buffer between the `should_refill` watermark and its
+/// capacity, pulling one bulk at a time from the coordinator queue.
+/// Exits — closing the buffer so the executors can drain and stop —
+/// once the queue is closed and empty.
+#[allow(clippy::too_many_arguments)]
+fn refill_loop(
+    worker_id: u32,
+    queue: &BulkQueue<TaskDesc>,
+    buffer: &TaskBuffer<TaskDesc>,
+    slots: usize,
+    bulk_size: usize,
+    cancel: &AtomicBool,
+    results: &Sender<TaskResult>,
+    t0: Instant,
+) {
+    loop {
+        if !buffer.wait_refill(slots, bulk_size, cancel) {
+            break; // buffer closed (executors lost their consumer)
+        }
+        match queue.pull_bulk() {
+            Some(tasks) => {
+                if let Err(rejected) = buffer.push_many(tasks) {
+                    // Buffer closed underneath us (teardown): conservation
+                    // still holds — surface the stranded tasks as Canceled.
+                    cancel_all(rejected, worker_id, results, t0);
+                    break;
+                }
+            }
+            None => break, // queue closed and drained
+        }
+    }
+    buffer.close();
+}
+
+/// Push dispatch (ablation): the coordinator side assigns each bulk to a
+/// worker chosen by the policy, using buffered task counts as the load
+/// signal.  Round-robin ignores the load (and shows head-of-line
+/// blocking under long tails — the point of the ablation); least-loaded
+/// tracks it.
+fn dispatch_loop(
+    queue: &BulkQueue<TaskDesc>,
+    buffers: &[Arc<TaskBuffer<TaskDesc>>],
+    mut dispatcher: Dispatcher,
+    results: &Sender<TaskResult>,
+    t0: Instant,
+) {
+    while let Some(tasks) = queue.pull_bulk() {
+        let buffered: Vec<u64> = buffers.iter().map(|b| b.len() as u64).collect();
+        let w = dispatcher.choose(&buffered);
+        if let Err(rejected) = buffers[w].push_many(tasks) {
+            cancel_all(rejected, w as u32, results, t0);
+        }
+    }
+    for b in buffers {
+        b.close();
+    }
+}
+
+/// Emit `Canceled` terminal results for tasks that can no longer reach an
+/// executor (send failures are ignored: if the collector is gone there is
+/// no accounting left to preserve).
+fn cancel_all(tasks: Vec<TaskDesc>, worker_id: u32, results: &Sender<TaskResult>, t0: Instant) {
+    let now = t0.elapsed().as_secs_f64();
+    for task in tasks {
+        let _ = results.send(TaskResult::canceled(task.uid, now, worker_id));
+    }
+}
+
+/// One executor slot: bootstrap the engine, then run tasks one at a time
+/// from the worker's shared buffer until it closes.
 #[allow(clippy::too_many_arguments)]
 fn executor_loop(
     worker_id: u32,
     engine_kind: EngineKind,
     exec_time_scale: f64,
-    queue: &BulkQueue<TaskDesc>,
+    buffer: &TaskBuffer<TaskDesc>,
     results: &Sender<TaskResult>,
     cancel: &AtomicBool,
     ready: &AtomicU64,
@@ -118,25 +393,19 @@ fn executor_loop(
     };
     ready.fetch_add(1, Ordering::SeqCst);
 
-    while let Some(bulk) = queue.pull_bulk() {
-        for task in bulk {
-            let started = t0.elapsed().as_secs_f64();
-            let result = if cancel.load(Ordering::SeqCst) {
-                TaskResult {
-                    uid: task.uid,
-                    state: TaskState::Canceled,
-                    scores: Vec::new(),
-                    started,
-                    finished: t0.elapsed().as_secs_f64(),
-                    worker: worker_id,
-                    failed_task: None,
-                }
-            } else {
-                run_task(&task, engine_kind, engine.as_mut(), exec_time_scale, worker_id, started, t0)
-            };
-            if results.send(result).is_err() {
-                return; // coordinator gone
-            }
+    while let Some(task) = buffer.pop() {
+        let started = t0.elapsed().as_secs_f64();
+        let result = if cancel.load(Ordering::SeqCst) {
+            TaskResult::canceled(task.uid, started, worker_id)
+        } else {
+            run_task(&task, engine_kind, engine.as_mut(), exec_time_scale, worker_id, started, t0)
+        };
+        if results.send(result).is_err() {
+            // Collector gone: close the buffer so the worker's other
+            // threads (and its refill loop) unwind instead of filling a
+            // buffer nobody drains.
+            buffer.close();
+            return;
         }
     }
 }
@@ -153,26 +422,32 @@ fn run_task(
     let (state, scores) = match &task.kind {
         TaskKind::Function(call) => match (engine_kind, engine) {
             (EngineKind::Synthetic, _) => (TaskState::Done, synthetic_scores(call)),
-            (_, Some(engine)) => match engine.dock(call.library_seed, call.first_ligand_id, call.protein_seed) {
-                Ok(mut scores) => {
-                    // Short trailing bundles: the artifact always scores a
-                    // full bundle; keep only the ligands the call covers.
-                    scores.truncate(call.bundle as usize);
-                    (TaskState::Done, scores)
+            (_, Some(engine)) => {
+                match engine.dock(call.library_seed, call.first_ligand_id, call.protein_seed) {
+                    Ok(mut scores) => {
+                        // Short trailing bundles: the artifact always scores
+                        // a full bundle; keep only the ligands the call
+                        // covers.
+                        scores.truncate(call.bundle as usize);
+                        (TaskState::Done, scores)
+                    }
+                    Err(err) => {
+                        log::warn!("task {}: dock failed: {err:#}", task.uid);
+                        (TaskState::Failed, Vec::new())
+                    }
                 }
-                Err(err) => {
-                    log::warn!("task {}: dock failed: {err:#}", task.uid);
-                    (TaskState::Failed, Vec::new())
-                }
-            },
+            }
             (_, None) => (TaskState::Failed, Vec::new()),
         },
         TaskKind::Executable(call) => {
             if call.command.is_empty() {
-                // Synthetic executable: sleep for the (scaled) duration.
+                // Synthetic executable: sleep for the (scaled) duration,
+                // clamped to MAX_SYNTHETIC_SLEEP_S (see its doc).
                 let dur = call.sim_duration * exec_time_scale;
                 if dur > 0.0 {
-                    std::thread::sleep(std::time::Duration::from_secs_f64(dur.min(10.0)));
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        dur.min(MAX_SYNTHETIC_SLEEP_S),
+                    ));
                 }
                 (TaskState::Done, Vec::new())
             } else {
@@ -220,6 +495,7 @@ mod tests {
     use super::*;
     use crate::task::DockCall;
     use std::sync::mpsc::channel;
+    use std::time::Duration;
 
     fn call(first: u64, bundle: u32) -> DockCall {
         DockCall {
@@ -230,19 +506,81 @@ mod tests {
         }
     }
 
+    fn pool_cfg(n_workers: u32, executors: u32, scale: f64, dispatch: Policy) -> RaptorConfig {
+        RaptorConfig {
+            n_workers,
+            executors_per_worker: executors,
+            bulk_size: 16,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: scale,
+            dispatch,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn buffer_push_pop_close() {
+        let b: TaskBuffer<u64> = TaskBuffer::new(4);
+        b.push_many(vec![1, 2, 3]).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.pop(), Some(1));
+        b.close();
+        // Drain continues after close...
+        assert_eq!(b.pop(), Some(2));
+        assert_eq!(b.pop(), Some(3));
+        assert_eq!(b.pop(), None);
+        // ...but new pushes bounce back.
+        assert_eq!(b.push_many(vec![9]), Err(vec![9]));
+    }
+
+    #[test]
+    fn buffer_admits_oversized_bulk() {
+        // A bulk larger than capacity is admitted whole once any space is
+        // free (overshoot beats deadlock).
+        let b: TaskBuffer<u64> = TaskBuffer::new(2);
+        b.push_many((0..10).collect()).unwrap();
+        assert_eq!(b.len(), 10);
+    }
+
+    #[test]
+    fn buffer_blocks_pusher_when_full() {
+        let b: Arc<TaskBuffer<u64>> = Arc::new(TaskBuffer::new(2));
+        b.push_many(vec![1, 2]).unwrap();
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.push_many(vec![3]).is_ok());
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(b.len(), 2, "pusher must be blocked at capacity");
+        assert_eq!(b.pop(), Some(1));
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn buffer_refill_watermark() {
+        let b: Arc<TaskBuffer<u64>> = Arc::new(TaskBuffer::new(64));
+        let cancel = Arc::new(AtomicBool::new(false));
+        // 16 buffered >= watermark max(8, 2): wait_refill must block
+        // until pops cross the watermark.
+        b.push_many((0..16).collect()).unwrap();
+        let b2 = b.clone();
+        let c2 = cancel.clone();
+        let t = std::thread::spawn(move || b2.wait_refill(2, 16, &c2));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "refill must wait above the watermark");
+        for _ in 0..9 {
+            b.pop().unwrap();
+        }
+        assert!(t.join().unwrap(), "below watermark -> refill");
+        // Closed buffer: refill loop must stop.
+        b.close();
+        assert!(!b.wait_refill(2, 16, &cancel));
+    }
+
     #[test]
     fn synthetic_pool_completes_all_tasks() {
         let queue = Arc::new(BulkQueue::new(4));
         let (tx, rx) = channel();
-        let pool = WorkerPool::spawn(
-            2,
-            2,
-            EngineKind::Synthetic,
-            0.0,
-            queue.clone(),
-            tx,
-            Instant::now(),
-        );
+        let cfg = pool_cfg(2, 2, 0.0, Policy::PullBased);
+        let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
         for b in 0..10u64 {
             let bulk: Vec<TaskDesc> = (0..16)
                 .map(|i| TaskDesc::function(b * 16 + i, call((b * 16 + i) * 8, 8)))
@@ -261,21 +599,39 @@ mod tests {
         let mut uids: Vec<u64> = got.iter().map(|r| r.uid).collect();
         uids.sort_unstable();
         assert_eq!(uids, (0..160).collect::<Vec<u64>>());
+        let (pushed, pulled) = queue.counts();
+        assert_eq!(pushed, pulled, "refill loops must drain the queue");
+    }
+
+    #[test]
+    fn push_policies_complete_all_tasks() {
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded] {
+            let queue = Arc::new(BulkQueue::new(4));
+            let (tx, rx) = channel();
+            let cfg = pool_cfg(3, 1, 0.0, policy);
+            let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
+            // Load observability: one buffered-task gauge per worker.
+            assert_eq!(pool.buffered().len(), 3);
+            for b in 0..12u64 {
+                let bulk: Vec<TaskDesc> = (0..8)
+                    .map(|i| TaskDesc::function(b * 8 + i, call((b * 8 + i) * 8, 8)))
+                    .collect();
+                queue.push_bulk(bulk).unwrap();
+            }
+            queue.close();
+            let mut uids: Vec<u64> = (0..96).map(|_| rx.recv().unwrap().uid).collect();
+            pool.join();
+            uids.sort_unstable();
+            assert_eq!(uids, (0..96).collect::<Vec<u64>>(), "policy {policy}");
+        }
     }
 
     #[test]
     fn executable_task_runs_real_process() {
         let queue = Arc::new(BulkQueue::new(2));
         let (tx, rx) = channel();
-        let pool = WorkerPool::spawn(
-            1,
-            1,
-            EngineKind::Synthetic,
-            0.0,
-            queue.clone(),
-            tx,
-            Instant::now(),
-        );
+        let cfg = pool_cfg(1, 1, 0.0, Policy::PullBased);
+        let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
         let ok = TaskDesc::executable(
             1,
             crate::task::ExecCall {
@@ -292,26 +648,22 @@ mod tests {
         );
         queue.push_bulk(vec![ok, bad]).unwrap();
         queue.close();
-        let r1 = rx.recv().unwrap();
-        let r2 = rx.recv().unwrap();
+        let mut by_uid = std::collections::HashMap::new();
+        for _ in 0..2 {
+            let r = rx.recv().unwrap();
+            by_uid.insert(r.uid, r.state);
+        }
         pool.join();
-        assert_eq!(r1.state, TaskState::Done);
-        assert_eq!(r2.state, TaskState::Failed);
+        assert_eq!(by_uid[&1], TaskState::Done);
+        assert_eq!(by_uid[&2], TaskState::Failed);
     }
 
     #[test]
     fn cancel_drains_as_canceled() {
         let queue = Arc::new(BulkQueue::new(64));
         let (tx, rx) = channel();
-        let pool = WorkerPool::spawn(
-            1,
-            1,
-            EngineKind::Synthetic,
-            1.0,
-            queue.clone(),
-            tx,
-            Instant::now(),
-        );
+        let cfg = pool_cfg(1, 1, 1.0, Policy::PullBased);
+        let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
         // One slow sleep task then many pending.
         let mut bulk = vec![TaskDesc::executable(
             0,
@@ -338,6 +690,41 @@ mod tests {
         assert!(canceled > 0, "cancel had no effect");
         assert!(done >= 1);
         assert_eq!(done + canceled, 50);
+        let (pushed, pulled) = queue.counts();
+        assert_eq!(pushed, pulled, "cancel must drain, not drop");
+    }
+
+    #[test]
+    fn long_tail_task_does_not_block_siblings() {
+        // One 64-task bulk whose first task sleeps: with task-granular
+        // buffers the second executor slot chews through the 63 instant
+        // siblings while the first sleeps.  (The seed's serial-bulk
+        // executor made the siblings wait the full sleep.)
+        let queue = Arc::new(BulkQueue::new(4));
+        let (tx, rx) = channel();
+        let cfg = pool_cfg(1, 2, 1.0, Policy::PullBased);
+        let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
+        let mut bulk = vec![TaskDesc::executable(
+            0,
+            crate::task::ExecCall {
+                command: vec![],
+                sim_duration: 0.5,
+            },
+        )];
+        for i in 1..64 {
+            bulk.push(TaskDesc::function(i, call(i * 8, 8)));
+        }
+        queue.push_bulk(bulk).unwrap();
+        queue.close();
+        let mut results: Vec<TaskResult> = (0..64).map(|_| rx.recv().unwrap()).collect();
+        pool.join();
+        results.sort_by_key(|r| r.uid);
+        let long_finish = results[0].finished;
+        let sibling_max = results[1..].iter().map(|r| r.finished).fold(0.0, f64::max);
+        assert!(
+            sibling_max < long_finish * 0.5,
+            "siblings ({sibling_max:.3}s) must not wait for the long task ({long_finish:.3}s)"
+        );
     }
 
     #[test]

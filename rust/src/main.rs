@@ -8,14 +8,15 @@
 //!   info                                       platform + artifact status
 
 use raptor::campaign::{self, figures, table};
-use raptor::coordinator::{Coordinator, EngineKind, RaptorConfig};
+use raptor::coordinator::{Coordinator, EngineKind, Policy, RaptorConfig};
 use raptor::metrics::{print_comparison, Table1Row};
 use raptor::pilot::GlobalSchedulerModel;
 use raptor::util::cli::Args;
 use raptor::workload::{DockTimeModel, LigandLibrary};
 
 const VALUE_KEYS: &[&str] = &[
-    "id", "scale", "out", "tasks", "workers", "slots", "seed", "bundle", "executors",
+    "id", "scale", "out", "tasks", "workers", "slots", "seed", "bundle", "executors", "policy",
+    "bulk",
 ];
 
 fn main() {
@@ -47,6 +48,7 @@ USAGE:
   raptor exp --id N [--scale S] [--out DIR]   simulate paper experiment N (1..4)
   raptor table1 [--scale S] [--out DIR]       regenerate all Table-I rows
   raptor dock [--tasks N] [--workers W] [--executors E]
+              [--policy pull|rr|least] [--bulk B]
                                               real docking via PJRT workers
   raptor baseline [--tasks N] [--slots S]     baselines: RP-only, static, pull
   raptor info                                 platform presets + artifacts";
@@ -123,15 +125,18 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
     let workers: u32 = args.get_parse("workers", 2)?;
     let executors: u32 = args.get_parse("executors", 2)?;
     let bundle: u32 = args.get_parse("bundle", 8)?;
+    let bulk: usize = args.get_parse("bulk", 64)?;
+    let policy = Policy::parse(args.get("policy").unwrap_or("pull"))?;
     let lib = LigandLibrary::tiny(n_tasks * bundle as u64);
     println!(
-        "real-mode docking: {n_tasks} calls x {bundle} ligands on {workers} workers x {executors} executors"
+        "real-mode docking: {n_tasks} calls x {bundle} ligands on {workers} workers x {executors} executors ({policy} dispatch, bulk {bulk})"
     );
     let cfg = RaptorConfig {
         n_workers: workers,
         executors_per_worker: executors,
         engine: EngineKind::PjrtCpu,
-        bulk_size: 64,
+        bulk_size: bulk,
+        dispatch: policy,
         ..Default::default()
     };
     let mut c = Coordinator::new(cfg)?;

@@ -11,7 +11,9 @@ pub mod fs;
 pub mod mpi;
 pub mod topology;
 
-pub use batch::{frontera_normal, reservation, summit_batch, BatchSim, JobId, QueuePolicy, WaitShape};
+pub use batch::{
+    frontera_normal, reservation, summit_batch, BatchSim, JobId, QueuePolicy, WaitShape,
+};
 pub use fs::{FsModel, StallWindow};
 pub use mpi::MpiModel;
 pub use topology::{frontera, localhost, summit, NodeSpec, PlatformSpec};

@@ -128,7 +128,28 @@ impl TaskResult {
     pub fn duration(&self) -> f64 {
         self.finished - self.started
     }
+
+    /// Synthesize the terminal record for a task canceled before (or
+    /// instead of) execution, at time `now` (seconds since run start).
+    /// `worker` is the executor's worker id, or [`NO_WORKER`] when the
+    /// task never reached a worker (e.g. dropped by the bulk feeder
+    /// after `stop()`).
+    pub fn canceled(uid: TaskId, now: f64, worker: u32) -> Self {
+        Self {
+            uid,
+            state: TaskState::Canceled,
+            scores: Vec::new(),
+            started: now,
+            finished: now,
+            worker,
+            failed_task: None,
+        }
+    }
 }
+
+/// Sentinel `TaskResult::worker` for tasks that reached a terminal state
+/// without ever being assigned to a worker.
+pub const NO_WORKER: u32 = u32::MAX;
 
 #[cfg(test)]
 mod tests {

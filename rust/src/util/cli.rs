@@ -15,7 +15,10 @@ pub struct Args {
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
     /// `value_keys`: option names that take a value.
-    pub fn parse<I: IntoIterator<Item = String>>(args: I, value_keys: &[&str]) -> anyhow::Result<Self> {
+    pub fn parse<I: IntoIterator<Item = String>>(
+        args: I,
+        value_keys: &[&str],
+    ) -> anyhow::Result<Self> {
         let mut out = Args::default();
         let mut it = args.into_iter();
         while let Some(a) = it.next() {

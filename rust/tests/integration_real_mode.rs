@@ -5,7 +5,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use raptor::coordinator::{Coordinator, EngineKind, RaptorConfig};
+use raptor::coordinator::{Coordinator, EngineKind, Policy, RaptorConfig};
 use raptor::runtime::{artifacts_built, DockEngine};
 use raptor::task::{DockCall, ExecCall, TaskDesc, TaskState};
 use raptor::workload::{calls_to_tasks, LigandLibrary};
@@ -232,6 +232,135 @@ fn gpu_bundle_engine_roundtrip() {
         assert_eq!(r.scores.len(), 16);
         assert!(r.scores.iter().all(|s| s.is_finite()));
     }
+}
+
+/// Every live dispatch policy moves a mixed workload end to end with
+/// exact accounting and a fully drained coordinator queue.
+#[test]
+fn dispatch_policies_complete_end_to_end() {
+    for policy in [Policy::PullBased, Policy::RoundRobin, Policy::LeastLoaded] {
+        let cfg = RaptorConfig {
+            n_workers: 3,
+            executors_per_worker: 2,
+            bulk_size: 16,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 0.0,
+            dispatch: policy,
+            keep_results: true,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg).unwrap();
+        let n = 300u64;
+        c.submit((0..n).map(|i| {
+            if i % 5 == 0 {
+                TaskDesc::executable(
+                    i,
+                    ExecCall {
+                        command: vec!["/bin/sh".into(), "-c".into(), ":".into()],
+                        sim_duration: 0.0,
+                    },
+                )
+            } else {
+                dock_task(i)
+            }
+        }))
+        .unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, n, "policy {policy}");
+        assert_eq!(report.failed + report.canceled, 0, "policy {policy}");
+        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(uids, (0..n).collect::<Vec<u64>>(), "policy {policy}");
+        let (pushed, pulled) = c.queue_counts();
+        assert_eq!(pushed, pulled, "policy {policy}: queue not drained");
+    }
+}
+
+/// With task-granular worker buffers, a long-tailed task occupies one
+/// executor slot while its bulk-siblings flow to the other slot — the
+/// siblings must not wait for the straggler (the seed's serial-bulk
+/// executor made them).
+#[test]
+fn long_tail_does_not_starve_bulk_siblings() {
+    let cfg = RaptorConfig {
+        n_workers: 1,
+        executors_per_worker: 2,
+        bulk_size: 64,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 1.0,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let mut tasks = vec![TaskDesc::executable(
+        0,
+        ExecCall {
+            command: vec![],
+            sim_duration: 0.5,
+        },
+    )];
+    tasks.extend((1..64).map(dock_task));
+    c.submit(tasks).unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, 64);
+    let long = report.results.iter().find(|r| r.uid == 0).unwrap();
+    let sibling_max = report
+        .results
+        .iter()
+        .filter(|r| r.uid != 0)
+        .map(|r| r.finished)
+        .fold(0.0, f64::max);
+    assert!(
+        sibling_max < long.finished * 0.5,
+        "siblings ({sibling_max:.3}s) waited for the straggler ({:.3}s)",
+        long.finished
+    );
+}
+
+/// Regression for the retry-resubmission stall: a burst of failures
+/// against a minimal-capacity queue must not wedge the result collector
+/// (the seed pushed one blocking single-task bulk per failure from the
+/// collector thread).  Retries are now buffered and flushed in batched
+/// bulks with a non-blocking push, so this run completes with exact
+/// accounting.
+#[test]
+fn retry_burst_against_full_queue_completes() {
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 1,
+        bulk_size: 4,
+        queue_capacity: 1, // maximal backpressure on the retry path
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 0.0,
+        keep_results: true,
+        max_retries: 2,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let n = 120u64;
+    c.submit((0..n).map(|i| {
+        if i % 2 == 0 {
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec!["/nonexistent/definitely-not-a-binary".into()],
+                    sim_duration: 0.0,
+                },
+            )
+        } else {
+            dock_task(i)
+        }
+    }))
+    .unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, n / 2);
+    assert_eq!(report.failed, n / 2, "every broken task exhausts its retries");
+    assert_eq!(report.canceled, 0);
+    let (pushed, pulled) = c.queue_counts();
+    assert_eq!(pushed, pulled);
 }
 
 /// Retry policy (§VI failure management): a flaky executable that fails

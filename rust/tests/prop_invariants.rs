@@ -8,10 +8,12 @@ use std::collections::HashSet;
 use std::sync::Arc;
 
 use common::prop;
-use raptor::coordinator::{BulkQueue, Partition};
+use raptor::coordinator::{BulkQueue, Coordinator, EngineKind, Partition, Policy, RaptorConfig};
 use raptor::metrics::{StreamMetrics, TaskClass};
 use raptor::platform::{BatchSim, QueuePolicy, WaitShape};
 use raptor::sim::Engine;
+use raptor::task::{DockCall, ExecCall, TaskDesc};
+use raptor::util::rng::SplitMix64;
 use raptor::workload::duration::probit;
 use raptor::workload::{DockTimeModel, LigandLibrary};
 
@@ -100,6 +102,106 @@ fn prop_queue_no_loss_no_dup() {
         all.sort_unstable();
         all.dedup();
         assert_eq!(all.len() as u64, producers as u64 * per, "lost or duplicated items");
+    });
+}
+
+/// A random task for the conservation property: instant docking call,
+/// synthetic sleeper (ms scale), or an executable that fails fast
+/// (nonexistent binary — exercises Failed + retry paths).
+fn random_task(uid: u64, rng: &mut SplitMix64) -> TaskDesc {
+    match rng.next_below(4) {
+        0 => TaskDesc::executable(
+            uid,
+            ExecCall {
+                command: vec![],
+                sim_duration: rng.uniform(0.0, 0.004),
+            },
+        ),
+        1 => TaskDesc::executable(
+            uid,
+            ExecCall {
+                command: vec!["/nonexistent/raptor-prop-missing-binary".into()],
+                sim_duration: 0.0,
+            },
+        ),
+        _ => TaskDesc::function(
+            uid,
+            DockCall {
+                library_seed: 1,
+                protein_seed: 2,
+                first_ligand_id: uid * 4,
+                bundle: 4,
+            },
+        ),
+    }
+}
+
+/// Task-conservation invariant: for randomized configurations (dispatch
+/// policy, bulk size, queue capacity, retry budget), workloads (instant /
+/// sleeping / failing tasks, submissions before and after start) and
+/// interleavings (clean join vs stop at a random time), exactly
+/// `done + failed + canceled == submitted` terminal results are
+/// reported, each submitted uid exactly once, and the coordinator queue
+/// is fully drained (`pushed == pulled`) after teardown.
+#[test]
+fn prop_task_conservation_under_interleavings() {
+    prop(10, 9, |rng| {
+        let dispatch = match rng.next_below(3) {
+            0 => Policy::PullBased,
+            1 => Policy::RoundRobin,
+            _ => Policy::LeastLoaded,
+        };
+        let cfg = RaptorConfig {
+            n_workers: 1 + rng.next_below(3) as u32,
+            executors_per_worker: 1 + rng.next_below(3) as u32,
+            bulk_size: 1 + rng.next_below(16) as usize,
+            queue_capacity: 1 + rng.next_below(8) as usize,
+            dispatch,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            keep_results: true,
+            max_retries: rng.next_below(3) as u32,
+        };
+        let n_before = rng.next_below(120);
+        let n_after = rng.next_below(120);
+        let total = n_before + n_after;
+        let do_stop = rng.next_below(2) == 1;
+
+        let mut c = Coordinator::new(cfg).unwrap();
+        let mut tasks = Vec::new();
+        for i in 0..n_before {
+            tasks.push(random_task(i, rng));
+        }
+        c.submit(tasks).unwrap();
+        c.start().unwrap();
+        let mut tasks = Vec::new();
+        for i in n_before..total {
+            tasks.push(random_task(i, rng));
+        }
+        c.submit(tasks).unwrap();
+
+        let report = if do_stop {
+            std::thread::sleep(std::time::Duration::from_millis(rng.next_below(20)));
+            c.stop().unwrap()
+        } else {
+            c.join().unwrap()
+        };
+
+        assert_eq!(
+            report.done + report.failed + report.canceled,
+            total,
+            "conservation violated (stop={do_stop}, policy={dispatch})"
+        );
+        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(uids.len() as u64, total, "result count != submitted");
+        uids.dedup();
+        assert_eq!(uids.len() as u64, total, "duplicate terminal results");
+        if !do_stop {
+            assert_eq!(report.canceled, 0, "clean join must cancel nothing");
+        }
+        let (pushed, pulled) = c.queue_counts();
+        assert_eq!(pushed, pulled, "queue not drained after teardown");
     });
 }
 

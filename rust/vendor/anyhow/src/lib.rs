@@ -1,0 +1,194 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The build in this repository is fully offline, so the real crates.io
+//! `anyhow` cannot be fetched.  This shim implements exactly the surface
+//! the workspace uses:
+//!
+//! * [`Error`] — a context-chaining error value (`{}` prints the outermost
+//!   context, `{:#}` prints the whole chain `outer: ...: root`, matching
+//!   real anyhow's Display semantics);
+//! * [`Result`] — `Result<T, Error>` alias with a defaulted error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` (for
+//!   any `std::error::Error`) and on `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-style constructors;
+//! * a blanket `From<E: std::error::Error>` so `?` converts library
+//!   errors (mirroring real anyhow, [`Error`] itself deliberately does
+//!   NOT implement `std::error::Error`, which keeps that blanket impl
+//!   coherent).
+
+use std::fmt;
+
+/// Context-chaining error value.  Frame 0 is the outermost context; the
+/// last frame is the root cause.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+/// `anyhow::Result<T>`: the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            frames: vec![message.to_string()],
+        }
+    }
+
+    /// Build from a concrete error, capturing its `source()` chain.
+    /// Usable as a function value: `.map_err(anyhow::Error::new)`.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        let mut frames = vec![error.to_string()];
+        let mut src = error.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Self { frames }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost frame) as a string.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in self.frames[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` extension trait.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            // Not routed through format! so braces in the stringified
+            // expression cannot be misread as format placeholders.
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("opening artifact")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening artifact");
+        assert_eq!(format!("{e:#}"), "opening artifact: missing");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        fn f(x: Option<u32>) -> Result<u32> {
+            let v = x.context("empty")?;
+            ensure!(v < 10, "too big: {v}");
+            if v == 5 {
+                bail!("five is right out");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(Some(3)).unwrap(), 3);
+        assert_eq!(format!("{}", f(None).unwrap_err()), "empty");
+        assert_eq!(format!("{}", f(Some(12)).unwrap_err()), "too big: 12");
+        assert_eq!(format!("{}", f(Some(5)).unwrap_err()), "five is right out");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().root_cause(), "missing");
+    }
+}

@@ -1,0 +1,89 @@
+//! Minimal offline shim of the `log` facade.
+//!
+//! `error!` and `warn!` always print to stderr; `info!`, `debug!` and
+//! `trace!` only when the `RAPTOR_LOG` environment variable is set (any
+//! value).  No registry, no per-module filtering — this repository only
+//! needs a handful of diagnostics on worker/engine failure paths.
+
+use std::fmt;
+
+/// Severity levels, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Whether a record at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level <= Level::Warn || std::env::var_os("RAPTOR_LOG").is_some()
+}
+
+/// Macro plumbing — not part of the public facade.
+#[doc(hidden)]
+pub fn __log(level: Level, args: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.label(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Error, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Warn, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Info, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severe_levels_always_enabled() {
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+    }
+
+    #[test]
+    fn macros_expand() {
+        // Just exercise the expansion paths; output goes to stderr.
+        error!("e {}", 1);
+        warn!("w {}", 2);
+        info!("i {}", 3);
+        debug!("d {}", 4);
+        trace!("t {}", 5);
+    }
+}
