@@ -1,23 +1,40 @@
-//! Microbenchmark: bulk-queue throughput and the bulk-size ablation
-//! (§III design choice 5 — "submit function tasks in bulk").
+//! Microbenchmark: bulk-queue throughput — lock-free ring vs the
+//! mutex+condvar baseline — plus the bulk-size ablation (§III design
+//! choice 5, "submit function tasks in bulk").
 //!
-//!     cargo bench --bench bench_queue
+//!     cargo bench --bench bench_queue            # full run, writes BENCH_queue.json
+//!     cargo bench --bench bench_queue -- --smoke # CI-sized run
+//!     cargo bench --bench bench_queue -- --out path/to/BENCH_queue.json
 //!
-//! Measures the real BulkQueue (the ZeroMQ stand-in on the real-mode hot
-//! path) under producer/consumer load at different bulk sizes, and the
-//! simulated end-to-end effect of bulk size on campaign utilization.
+//! The headline number is the 4-producer × 4-consumer MPMC comparison at
+//! the production bulk size: the ring must beat the condvar queue ≥5× on
+//! the same machine (ISSUE 6 acceptance criterion).  Every measurement
+//! is also recorded machine-readably via `metrics::BenchReport` so the
+//! perf trajectory survives across PRs.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use raptor::campaign;
-use raptor::coordinator::{BulkQueue, TaskBuffer};
+use raptor::coordinator::{QueueImpl, TaskBuffer, TaskCursor, TaskQueue};
+use raptor::metrics::BenchReport;
+use raptor::util::cli::Args;
+use raptor::util::json::Json;
 
-fn bench_real_queue(bulk: usize, total_tasks: u64) -> f64 {
-    let queue: Arc<BulkQueue<u64>> = Arc::new(BulkQueue::new(64));
-    let n_consumers = 4;
+/// MPMC bulk throughput through the `TaskQueue` facade (what real mode
+/// actually calls): `producers` threads each pushing bulks of `bulk`
+/// items, `consumers` threads draining, bounded capacity 64 bulks.
+fn bench_queue_mpmc(
+    which: QueueImpl,
+    producers: u64,
+    consumers: u64,
+    bulk: usize,
+    total_tasks: u64,
+) -> f64 {
+    let queue: Arc<TaskQueue<u64>> = Arc::new(TaskQueue::new(which, 64));
+    let per_producer = total_tasks / producers;
     let t0 = Instant::now();
-    let consumers: Vec<_> = (0..n_consumers)
+    let consumer_handles: Vec<_> = (0..consumers)
         .map(|_| {
             let q = queue.clone();
             std::thread::spawn(move || {
@@ -29,21 +46,36 @@ fn bench_real_queue(bulk: usize, total_tasks: u64) -> f64 {
             })
         })
         .collect();
-    let mut sent = 0;
-    while sent < total_tasks {
-        let n = bulk.min((total_tasks - sent) as usize);
-        queue.push_bulk((sent..sent + n as u64).collect()).unwrap();
-        sent += n as u64;
+    let producer_handles: Vec<_> = (0..producers)
+        .map(|p| {
+            let q = queue.clone();
+            std::thread::spawn(move || {
+                let base = p * per_producer;
+                let mut sent = 0u64;
+                while sent < per_producer {
+                    let n = bulk.min((per_producer - sent) as usize) as u64;
+                    q.push_bulk((base + sent..base + sent + n).collect()).unwrap();
+                    sent += n;
+                }
+            })
+        })
+        .collect();
+    for p in producer_handles {
+        p.join().unwrap();
     }
     queue.close();
-    let got: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
-    assert_eq!(got, total_tasks);
-    total_tasks as f64 / t0.elapsed().as_secs_f64()
+    let got: u64 = consumer_handles.into_iter().map(|c| c.join().unwrap()).sum();
+    let sent = per_producer * producers;
+    assert_eq!(got, sent, "{which}: conservation");
+    let (pushed, pulled) = queue.counts();
+    assert_eq!(pushed, pulled);
+    sent as f64 / t0.elapsed().as_secs_f64()
 }
 
 /// Worker-local buffer handoff: one refill-style producer pushing bulks,
-/// `slots` executor-style consumers popping single tasks — the new
-/// task-granular hop between the coordinator queue and the slots.
+/// `slots` executor-style consumers claiming single tasks through their
+/// cursors — the task-granular hop between the coordinator queue and the
+/// executor slots.
 fn bench_task_buffer(bulk: usize, slots: usize, total_tasks: u64) -> f64 {
     let buffer: Arc<TaskBuffer<u64>> = Arc::new(TaskBuffer::new(2 * bulk.max(slots)));
     let t0 = Instant::now();
@@ -51,8 +83,9 @@ fn bench_task_buffer(bulk: usize, slots: usize, total_tasks: u64) -> f64 {
         .map(|_| {
             let b = buffer.clone();
             std::thread::spawn(move || {
+                let mut cur = TaskCursor::new();
                 let mut n = 0u64;
-                while b.pop().is_some() {
+                while b.pop(&mut cur).is_some() {
                     n += 1;
                 }
                 n
@@ -73,15 +106,41 @@ fn bench_task_buffer(bulk: usize, slots: usize, total_tasks: u64) -> f64 {
     total_tasks as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn main() {
-    println!("== real BulkQueue throughput (4 consumers) ==");
-    let total = 2_000_000;
-    for bulk in [1usize, 8, 32, 128, 512, 2048] {
-        let rate = bench_real_queue(bulk, total);
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["out"])?;
+    let smoke = args.flag("smoke");
+    let out = args.get("out").unwrap_or("BENCH_queue.json").to_string();
+    let mut report = BenchReport::new(if smoke { "bench_queue (smoke)" } else { "bench_queue" });
+
+    let total: u64 = if smoke { 200_000 } else { 2_000_000 };
+    let bulks: &[usize] = if smoke { &[128] } else { &[1, 8, 32, 128, 512] };
+    let (producers, consumers) = (4u64, 4u64);
+
+    println!("== MPMC bulk-queue throughput ({producers} producers x {consumers} consumers) ==");
+    for &bulk in bulks {
+        let mut rates = [0.0f64; 2];
+        for (i, which) in [QueueImpl::Condvar, QueueImpl::Ring].into_iter().enumerate() {
+            let rate = bench_queue_mpmc(which, producers, consumers, bulk, total);
+            rates[i] = rate;
+            report.push(
+                vec![
+                    ("impl", Json::Str(which.name().into())),
+                    ("producers", Json::Num(producers as f64)),
+                    ("consumers", Json::Num(consumers as f64)),
+                    ("bulk", Json::Num(bulk as f64)),
+                    ("capacity_bulks", Json::Num(64.0)),
+                ],
+                rate,
+            );
+            println!(
+                "  bulk {bulk:>5} {:>8}: {rate:>12.0} tasks/s  ({:.3} us/task)",
+                which.name(),
+                1e6 / rate
+            );
+        }
         println!(
-            "  bulk {bulk:>5}: {:>12.0} tasks/s  ({:.2} us/task)",
-            rate,
-            1e6 / rate
+            "  bulk {bulk:>5} speedup : ring = {:.2}x condvar",
+            rates[1] / rates[0]
         );
     }
 
@@ -89,49 +148,63 @@ fn main() {
     // needs ~40k tasks/s coordinator-wide; a worker buffer serves one
     // worker's slots only.
     println!("\n== worker TaskBuffer handoff (task-granular, 4 consumer slots) ==");
-    for bulk in [8usize, 32, 128, 512] {
-        let rate = bench_task_buffer(bulk, 4, 1_000_000);
-        println!(
-            "  refill bulk {bulk:>4}: {:>12.0} tasks/s  ({:.2} us/task)",
+    let buf_bulks: &[usize] = if smoke { &[128] } else { &[8, 32, 128, 512] };
+    for &bulk in buf_bulks {
+        let rate = bench_task_buffer(bulk, 4, total / 2);
+        report.push(
+            vec![
+                ("impl", Json::Str("task_buffer_segmented".into())),
+                ("slots", Json::Num(4.0)),
+                ("bulk", Json::Num(bulk as f64)),
+            ],
             rate,
+        );
+        println!(
+            "  refill bulk {bulk:>4}: {rate:>12.0} tasks/s  ({:.3} us/task)",
             1e6 / rate
         );
     }
 
-    // Demand at exp2 scale 0.1 is ~4,200 tasks/s; a single coordinator
-    // queue serves ~1,900 task-ops/s unbatched — so with ONE coordinator
-    // the bulk size decides whether workers starve (§III design choices
-    // 3 and 5 interact: more coordinators OR bigger bulks).
-    println!("\n== simulated bulk-size ablation (exp2 @ 0.1, 1 coordinator) ==");
-    println!("(paper default 128; small bulks starve workers on queue-op rate)");
-    for bulk in [1usize, 2, 8, 32, 128, 512] {
-        let mut cfg = campaign::exp2(0.1);
-        cfg.bulk_size = bulk;
-        cfg.n_coordinators = 1;
-        let t0 = Instant::now();
-        let r = campaign::run(&cfg);
-        let p = &r.pilots[0];
-        println!(
-            "  bulk {bulk:>4}: steady util {:>5.1}%  avg {:>5.1}%  makespan {:>7.0} s  ({:.1}s host)",
-            p.util.steady * 100.0,
-            p.util.avg * 100.0,
-            r.global.makespan(),
-            t0.elapsed().as_secs_f64()
-        );
+    if !smoke {
+        // Demand at exp2 scale 0.1 is ~4,200 tasks/s; a single coordinator
+        // queue serves ~1,900 task-ops/s unbatched — so with ONE coordinator
+        // the bulk size decides whether workers starve (§III design choices
+        // 3 and 5 interact: more coordinators OR bigger bulks).
+        println!("\n== simulated bulk-size ablation (exp2 @ 0.1, 1 coordinator) ==");
+        println!("(paper default 128; small bulks starve workers on queue-op rate)");
+        for bulk in [1usize, 2, 8, 32, 128, 512] {
+            let mut cfg = campaign::exp2(0.1);
+            cfg.bulk_size = bulk;
+            cfg.n_coordinators = 1;
+            let t0 = Instant::now();
+            let r = campaign::run(&cfg);
+            let p = &r.pilots[0];
+            println!(
+                "  bulk {bulk:>4}: steady util {:>5.1}%  avg {:>5.1}%  makespan {:>7.0} s  ({:.1}s host)",
+                p.util.steady * 100.0,
+                p.util.avg * 100.0,
+                r.global.makespan(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+
+        println!("\n== coordinator-count ablation (exp2 @ 0.1, bulk 1) ==");
+        println!("(paper used 158 coordinators at full scale; with unbatched queues the count is the only cure)");
+        for n_coord in [1u32, 2, 4, 8, 16] {
+            let mut cfg = campaign::exp2(0.1);
+            cfg.n_coordinators = n_coord;
+            cfg.bulk_size = 1;
+            let r = campaign::run(&cfg);
+            let p = &r.pilots[0];
+            println!(
+                "  coordinators {n_coord:>3}: steady util {:>5.1}%  makespan {:>7.0} s",
+                p.util.steady * 100.0,
+                r.global.makespan()
+            );
+        }
     }
 
-    println!("\n== coordinator-count ablation (exp2 @ 0.1, bulk 1) ==");
-    println!("(paper used 158 coordinators at full scale; with unbatched queues the count is the only cure)");
-    for n_coord in [1u32, 2, 4, 8, 16] {
-        let mut cfg = campaign::exp2(0.1);
-        cfg.n_coordinators = n_coord;
-        cfg.bulk_size = 1;
-        let r = campaign::run(&cfg);
-        let p = &r.pilots[0];
-        println!(
-            "  coordinators {n_coord:>3}: steady util {:>5.1}%  makespan {:>7.0} s",
-            p.util.steady * 100.0,
-            r.global.makespan()
-        );
-    }
+    report.write(&out)?;
+    println!("\nwrote {out}");
+    Ok(())
 }

@@ -1,37 +1,47 @@
 //! The §III motivation bench: RP's global scheduler vs RAPTOR.
 //!
-//!     cargo bench --bench bench_scheduler
+//!     cargo bench --bench bench_scheduler            # full run, writes BENCH_scheduler.json
+//!     cargo bench --bench bench_scheduler -- --smoke # CI-sized run
+//!     cargo bench --bench bench_scheduler -- --out path/to/BENCH_scheduler.json
 //!
-//! Four measurements:
+//! Measurements:
 //! 1. real-mode RAPTOR dispatch overhead (synthetic engine: pure
-//!    coordinator/queue/worker path) — must far exceed RP's ~350 tasks/s;
+//!    coordinator/queue/worker path), under both queue implementations
+//!    (`ring` vs `condvar`) — must far exceed RP's ~350 tasks/s;
 //! 2. real-mode dispatch-policy sweep on a mixed long-tailed workload:
 //!    the seed's serial-bulk executor (re-created here as a baseline)
 //!    vs worker-local task buffers under pull / round-robin /
-//!    least-loaded dispatch;
+//!    least-loaded dispatch, with pull also compared across queue impls;
 //! 3. modeled RP-only vs RAPTOR-pull makespans across task durations —
 //!    reproduces "performance degrades for short running tasks on large
 //!    resources" with the crossover thresholds;
 //! 4. dispatch-policy ablation (pull vs static) under the modeled
 //!    long-tail workload.
+//!
+//! Real-mode rates are recorded machine-readably via
+//! `metrics::BenchReport` (the perf trajectory file).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use raptor::baseline;
 use raptor::coordinator::worker::synthetic_scores;
-use raptor::coordinator::{BulkQueue, Coordinator, EngineKind, Policy, RaptorConfig};
+use raptor::coordinator::{BulkQueue, Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig};
+use raptor::metrics::BenchReport;
 use raptor::pilot::GlobalSchedulerModel;
 use raptor::task::{DockCall, ExecCall, TaskDesc, TaskKind};
+use raptor::util::cli::Args;
+use raptor::util::json::Json;
 use raptor::util::rng::SplitMix64;
 use raptor::workload::DockTimeModel;
 
-fn raptor_dispatch_rate(n_tasks: u64) -> f64 {
+fn raptor_dispatch_rate(n_tasks: u64, queue_impl: QueueImpl) -> f64 {
     let cfg = RaptorConfig {
         n_workers: 4,
         executors_per_worker: 2,
         bulk_size: 128,
         engine: EngineKind::Synthetic,
+        queue_impl,
         ..Default::default()
     };
     let mut c = Coordinator::new(cfg).unwrap();
@@ -90,7 +100,7 @@ const SWEEP_BULK: usize = 64;
 
 /// Run the real coordinator path under one dispatch policy.
 /// Returns (tasks/s, avg utilization).
-fn real_mode_policy(policy: Policy, tasks: Vec<TaskDesc>) -> (f64, f64) {
+fn real_mode_policy(policy: Policy, queue_impl: QueueImpl, tasks: Vec<TaskDesc>) -> (f64, f64) {
     let n = tasks.len() as u64;
     let cfg = RaptorConfig {
         n_workers: SWEEP_WORKERS,
@@ -99,6 +109,7 @@ fn real_mode_policy(policy: Policy, tasks: Vec<TaskDesc>) -> (f64, f64) {
         engine: EngineKind::Synthetic,
         exec_time_scale: 1.0,
         dispatch: policy,
+        queue_impl,
         ..Default::default()
     };
     let mut c = Coordinator::new(cfg).unwrap();
@@ -112,7 +123,9 @@ fn real_mode_policy(policy: Policy, tasks: Vec<TaskDesc>) -> (f64, f64) {
 
 /// Re-creation of the SEED executor: each slot pulls a whole bulk from
 /// the shared queue and runs it serially, so a long-tailed task blocks
-/// its queued bulk-siblings while other slots starve.
+/// its queued bulk-siblings while other slots starve.  Deliberately kept
+/// on the condvar `BulkQueue` — this is the frozen seed baseline the
+/// policy sweep is measured against.
 /// Returns (tasks/s, avg utilization as busy-slot-seconds / slot-seconds).
 fn serial_bulk_baseline(tasks: Vec<TaskDesc>) -> (f64, f64) {
     let n = tasks.len() as u64;
@@ -163,67 +176,124 @@ fn serial_bulk_baseline(tasks: Vec<TaskDesc>) -> (f64, f64) {
     (n as f64 / wall, busy / (slots as f64 * wall))
 }
 
-fn main() {
-    println!("== real-mode RAPTOR dispatch overhead (synthetic tasks) ==");
-    let rate = raptor_dispatch_rate(400_000);
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["out"])?;
+    let smoke = args.flag("smoke");
+    let out = args.get("out").unwrap_or("BENCH_scheduler.json").to_string();
+    let mut report = BenchReport::new(if smoke {
+        "bench_scheduler (smoke)"
+    } else {
+        "bench_scheduler"
+    });
+
+    let dispatch_tasks: u64 = if smoke { 50_000 } else { 400_000 };
+    let mixed_tasks: u64 = if smoke { 1_000 } else { 2_000 };
+
+    println!("== real-mode RAPTOR dispatch overhead (synthetic tasks, {dispatch_tasks}) ==");
     let sched = GlobalSchedulerModel::rp_tuned();
+    let mut ring_rate = 0.0;
+    for which in [QueueImpl::Condvar, QueueImpl::Ring] {
+        let rate = raptor_dispatch_rate(dispatch_tasks, which);
+        if which == QueueImpl::Ring {
+            ring_rate = rate;
+        }
+        report.push(
+            vec![
+                ("bench", Json::Str("dispatch_rate".into())),
+                ("impl", Json::Str(which.name().into())),
+                ("workers", Json::Num(4.0)),
+                ("executors", Json::Num(2.0)),
+                ("bulk", Json::Num(128.0)),
+            ],
+            rate,
+        );
+        println!(
+            "  RAPTOR coordinator ({:>7}): {rate:>9.0} tasks/s ({:.1} us/task)",
+            which.name(),
+            1e6 / rate
+        );
+    }
     println!(
-        "  RAPTOR coordinator: {:>9.0} tasks/s ({:.1} us/task)",
-        rate,
-        1e6 / rate
-    );
-    println!(
-        "  RP global scheduler (paper-tuned model): {:>6.0} tasks/s peak -> RAPTOR is {:.0}x faster",
+        "  RP global scheduler (paper-tuned model): {:>6.0} tasks/s peak -> RAPTOR (ring) is {:.0}x faster",
         sched.peak_rate(56_000),
-        rate / sched.peak_rate(56_000)
+        ring_rate / sched.peak_rate(56_000)
     );
 
     println!(
-        "\n== real-mode policy sweep (mixed long-tail, 2000 tasks, {SWEEP_WORKERS} workers x {SWEEP_EXECUTORS} executors, bulk {SWEEP_BULK}) =="
+        "\n== real-mode policy sweep (mixed long-tail, {mixed_tasks} tasks, {SWEEP_WORKERS} workers x {SWEEP_EXECUTORS} executors, bulk {SWEEP_BULK}) =="
     );
     println!("  (seed baseline runs each pulled bulk serially on one slot — the head-of-line blocking the worker-local buffers remove)");
-    let (rate, util) = serial_bulk_baseline(mixed_longtail_tasks(2000, 7));
+    let (rate, util) = serial_bulk_baseline(mixed_longtail_tasks(mixed_tasks, 7));
+    report.push(
+        vec![
+            ("bench", Json::Str("mixed_longtail".into())),
+            ("impl", Json::Str("serial_bulk_seed".into())),
+        ],
+        rate,
+    );
     println!(
-        "  {:<28} {:>8.0} tasks/s   util {:>5.1}%",
+        "  {:<34} {:>8.0} tasks/s   util {:>5.1}%",
         "serial-bulk (seed executor)",
         rate,
         util * 100.0
     );
-    for policy in [Policy::PullBased, Policy::RoundRobin, Policy::LeastLoaded] {
-        let (rate, util) = real_mode_policy(policy, mixed_longtail_tasks(2000, 7));
+    for (policy, which) in [
+        (Policy::PullBased, QueueImpl::Condvar),
+        (Policy::PullBased, QueueImpl::Ring),
+        (Policy::RoundRobin, QueueImpl::Ring),
+        (Policy::LeastLoaded, QueueImpl::Ring),
+    ] {
+        let (rate, util) = real_mode_policy(policy, which, mixed_longtail_tasks(mixed_tasks, 7));
+        report.push(
+            vec![
+                ("bench", Json::Str("mixed_longtail".into())),
+                ("impl", Json::Str(which.name().into())),
+                ("policy", Json::Str(policy.name().into())),
+                ("workers", Json::Num(SWEEP_WORKERS as f64)),
+                ("executors", Json::Num(SWEEP_EXECUTORS as f64)),
+                ("bulk", Json::Num(SWEEP_BULK as f64)),
+            ],
+            rate,
+        );
         println!(
-            "  {:<28} {:>8.0} tasks/s   util {:>5.1}%",
-            format!("worker buffers / {policy}"),
+            "  {:<34} {:>8.0} tasks/s   util {:>5.1}%",
+            format!("worker buffers / {policy} / {which}"),
             rate,
             util * 100.0
         );
     }
 
-    println!("\n== RP-only vs RAPTOR across task durations (modeled, 56k slots = 1000 Frontera nodes) ==");
-    println!("  paper: RP degrades below ~60 s tasks at ~1000 nodes");
-    let slots = 56_000u64;
-    let n_tasks = 500_000u64;
-    for mean in [1.0f64, 5.0, 15.0, 60.0, 180.0, 600.0] {
-        let m = DockTimeModel::from_mean_max(mean, mean * 30.0, n_tasks).with_floor(mean * 0.1);
-        let rp = baseline::rp_only(n_tasks, slots, &m, &sched, 11);
-        let ra = baseline::dynamic_pull(n_tasks, slots, &m, 11);
-        println!(
-            "  mean {mean:>6.0} s: RP util {:>5.1}%  RAPTOR util {:>5.1}%  makespan ratio {:>6.1}x",
-            rp.utilization * 100.0,
-            ra.utilization * 100.0,
-            rp.makespan_s / ra.makespan_s
-        );
+    if !smoke {
+        println!("\n== RP-only vs RAPTOR across task durations (modeled, 56k slots = 1000 Frontera nodes) ==");
+        println!("  paper: RP degrades below ~60 s tasks at ~1000 nodes");
+        let slots = 56_000u64;
+        let n_tasks = 500_000u64;
+        for mean in [1.0f64, 5.0, 15.0, 60.0, 180.0, 600.0] {
+            let m = DockTimeModel::from_mean_max(mean, mean * 30.0, n_tasks).with_floor(mean * 0.1);
+            let rp = baseline::rp_only(n_tasks, slots, &m, &sched, 11);
+            let ra = baseline::dynamic_pull(n_tasks, slots, &m, 11);
+            println!(
+                "  mean {mean:>6.0} s: RP util {:>5.1}%  RAPTOR util {:>5.1}%  makespan ratio {:>6.1}x",
+                rp.utilization * 100.0,
+                ra.utilization * 100.0,
+                rp.makespan_s / ra.makespan_s
+            );
+        }
+
+        println!("\n== dispatch-policy ablation (long-tail, 204.8k tasks / 2048 slots) ==");
+        let m = DockTimeModel::from_mean_max(10.0, 600.0, 204_800);
+        let stat = baseline::static_partition(204_800, 2_048, &m, 42);
+        let pull = baseline::dynamic_pull(204_800, 2_048, &m, 42);
+        for (name, o) in [("static (VirtualFlow-like)", stat), ("dynamic pull (RAPTOR)", pull)] {
+            println!(
+                "  {name:<26} makespan {:>7.0} s  util {:>5.1}%",
+                o.makespan_s,
+                o.utilization * 100.0
+            );
+        }
     }
 
-    println!("\n== dispatch-policy ablation (long-tail, 204.8k tasks / 2048 slots) ==");
-    let m = DockTimeModel::from_mean_max(10.0, 600.0, 204_800);
-    let stat = baseline::static_partition(204_800, 2_048, &m, 42);
-    let pull = baseline::dynamic_pull(204_800, 2_048, &m, 42);
-    for (name, o) in [("static (VirtualFlow-like)", stat), ("dynamic pull (RAPTOR)", pull)] {
-        println!(
-            "  {name:<26} makespan {:>7.0} s  util {:>5.1}%",
-            o.makespan_s,
-            o.utilization * 100.0
-        );
-    }
+    report.write(&out)?;
+    println!("\nwrote {out}");
+    Ok(())
 }

@@ -3,6 +3,7 @@
 //! bulk size) plus reproduction-specific execution options.
 
 use super::dispatch::{Policy, DEFAULT_BULK};
+use super::queue::QueueImpl;
 
 /// What a worker's executor slots run for *function* tasks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,6 +30,11 @@ pub struct RaptorConfig {
     pub bulk_size: usize,
     /// Max bulks buffered in the coordinator queue (backpressure bound).
     pub queue_capacity: usize,
+    /// Coordinator-queue implementation: lock-free ring (default) or the
+    /// mutex+condvar baseline, `--queue ring|condvar` on the CLI.  Both
+    /// satisfy the same contract; the toggle exists so the conservation
+    /// tests and benches exercise them head-to-head.
+    pub queue_impl: QueueImpl,
     /// How bulks travel from the coordinator queue to the workers'
     /// task-granular local buffers:
     /// * [`Policy::PullBased`] (paper default) — each worker runs a refill
@@ -60,6 +66,7 @@ impl Default for RaptorConfig {
             executors_per_worker: 2,
             bulk_size: DEFAULT_BULK,
             queue_capacity: 8,
+            queue_impl: QueueImpl::Ring,
             dispatch: Policy::PullBased,
             engine: EngineKind::Synthetic,
             exec_time_scale: 1.0,

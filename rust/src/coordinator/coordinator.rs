@@ -4,20 +4,31 @@
 //!
 //! Tasks are submitted (before or after `start`), batched into bulks of
 //! `bulk_size` (§III design choice 5), pushed through the bounded queue
-//! (backpressure), pulled by executor slots, and their results are
-//! collected by `join`, which also drives the user callback.
+//! (backpressure), pulled by executor slots, and their results come back
+//! as *result-bulks* (executor slots batch up to `RESULT_BATCH` results
+//! per channel send) collected by `join`, which also drives the user
+//! callback.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::metrics::{utilization, Timeline, Utilization};
 use crate::task::{TaskDesc, TaskResult, TaskState, NO_WORKER};
 
 use super::config::RaptorConfig;
-use super::queue::{BulkQueue, TryPushError};
+use super::queue::{TaskQueue, TryPushError};
 use super::worker::WorkerPool;
+
+/// Retry-flush backoff bounds: after a `TryPushError::Full`, the next
+/// flush attempt waits `RETRY_BACKOFF_MIN`, doubling per consecutive
+/// failure up to `RETRY_BACKOFF_MAX`.  Without this the collector
+/// busy-spins flush attempts against a saturated queue — each failed
+/// `try_push_bulk` is pure contention on the very queue the workers are
+/// trying to drain.
+const RETRY_BACKOFF_MIN: Duration = Duration::from_micros(500);
+const RETRY_BACKOFF_MAX: Duration = Duration::from_millis(50);
 
 /// Result-callback type (the paper's status callbacks).
 pub type ResultCallback = Box<dyn FnMut(&TaskResult) + Send>;
@@ -39,6 +50,9 @@ pub struct RunReport {
     pub utilization: Utilization,
     /// Completed-task throughput (tasks/s over the whole run).
     pub rate_per_s: f64,
+    /// Times the retry flush found the queue full and backed off
+    /// (observability for the failure-management path under saturation).
+    pub retry_flush_stalls: u64,
     /// Retained results (when `cfg.keep_results`).
     pub results: Vec<TaskResult>,
 }
@@ -57,9 +71,9 @@ pub struct Coordinator {
     submit_tx: Option<Sender<TaskDesc>>,
     submit_rx: Option<Receiver<TaskDesc>>,
     submitted: Arc<AtomicU64>,
-    queue: Arc<BulkQueue<TaskDesc>>,
-    results_rx: Option<Receiver<TaskResult>>,
-    results_tx: Option<Sender<TaskResult>>,
+    queue: Arc<TaskQueue<TaskDesc>>,
+    results_rx: Option<Receiver<Vec<TaskResult>>>,
+    results_tx: Option<Sender<Vec<TaskResult>>>,
     pool: Option<WorkerPool>,
     feeder: Option<std::thread::JoinHandle<()>>,
     callback: Option<ResultCallback>,
@@ -72,7 +86,7 @@ impl Coordinator {
         cfg.validate()?;
         let (submit_tx, submit_rx) = channel();
         let (results_tx, results_rx) = channel();
-        let queue = Arc::new(BulkQueue::new(cfg.queue_capacity));
+        let queue = Arc::new(TaskQueue::new(cfg.queue_impl, cfg.queue_capacity));
         Ok(Self {
             cfg,
             submit_tx: Some(submit_tx),
@@ -157,9 +171,13 @@ impl Coordinator {
                     dropped = refused;
                 }
             }
-            let now = t0.elapsed().as_secs_f64();
-            for task in dropped {
-                let _ = feeder_tx.send(TaskResult::canceled(task.uid, now, NO_WORKER));
+            if !dropped.is_empty() {
+                let now = t0.elapsed().as_secs_f64();
+                let canceled: Vec<TaskResult> = dropped
+                    .into_iter()
+                    .map(|task| TaskResult::canceled(task.uid, now, NO_WORKER))
+                    .collect();
+                let _ = feeder_tx.send(canceled);
             }
         }));
         self.phase = Phase::Started;
@@ -238,21 +256,35 @@ impl Coordinator {
         // out — while also pushing one single-task bulk per failure
         // through the bounded queue (the seed behavior) burns queue slots.
         let mut retry_buf: Vec<(TaskResult, TaskDesc)> = Vec::new();
+        // Capped exponential backoff on retry flushes: `next_flush` gates
+        // the attempts, doubling the gap per consecutive `Full` up to
+        // RETRY_BACKOFF_MAX, resetting once a flush lands.
+        let mut backoff = RETRY_BACKOFF_MIN;
+        let mut next_flush = Instant::now();
+        let mut retry_flush_stalls: u64 = 0;
         while acc.received < expected() {
-            if !retry_buf.is_empty() {
+            if !retry_buf.is_empty() && Instant::now() >= next_flush {
                 let (results, tasks): (Vec<TaskResult>, Vec<TaskDesc>) =
                     retry_buf.drain(..).unzip();
                 match self.queue.try_push_bulk(tasks) {
-                    Ok(()) => {}
+                    Ok(()) => {
+                        backoff = RETRY_BACKOFF_MIN;
+                    }
                     // Queue saturated: workers are pulling, so more results
                     // (and another flush chance) are on the way.  The push
-                    // hands the bulk back; re-pair it for the next attempt.
+                    // hands the bulk back; re-pair it and back off — an
+                    // immediate retry would just contend on the queue the
+                    // workers are draining.
                     Err(TryPushError::Full(tasks)) => {
                         retry_buf = results.into_iter().zip(tasks).collect();
+                        retry_flush_stalls += 1;
+                        next_flush = Instant::now() + backoff;
+                        backoff = (backoff * 2).min(RETRY_BACKOFF_MAX);
                     }
                     // Queue closed by `stop`: the retry can never run, so
                     // the buffered failure is the terminal outcome.
                     Err(TryPushError::Closed(_)) => {
+                        backoff = RETRY_BACKOFF_MIN;
                         for r in results {
                             acc.terminal(r, &mut self.callback)?;
                         }
@@ -262,28 +294,43 @@ impl Coordinator {
                     break;
                 }
             }
-            let r = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break, // all workers gone
-            };
-            // Failed task with retry budget left: buffer for resubmission
-            // instead of counting it as terminal.
-            let retryable = r.state == TaskState::Failed && r.failed_task.is_some();
-            if retryable && self.cfg.max_retries > 0 {
-                let n = attempts.entry(r.uid).or_insert(0);
-                if *n < self.cfg.max_retries {
-                    *n += 1;
-                    log::info!("retrying task {} (attempt {})", r.uid, *n + 1);
-                    let task = r
-                        .failed_task
-                        .as_deref()
-                        .cloned()
-                        .expect("retry result retains its task");
-                    retry_buf.push((r, task));
-                    continue; // not terminal yet
+            // Receive the next result-bulk.  With retries pending, bound
+            // the wait by the flush deadline: a plain recv could park
+            // forever when the only outstanding tasks are the buffered
+            // retries themselves.
+            let bulk = if retry_buf.is_empty() {
+                match rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => break, // all workers gone
                 }
+            } else {
+                let wait = next_flush.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(wait) {
+                    Ok(b) => b,
+                    Err(RecvTimeoutError::Timeout) => continue, // flush due
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            };
+            for r in bulk {
+                // Failed task with retry budget left: buffer for
+                // resubmission instead of counting it as terminal.
+                let retryable = r.state == TaskState::Failed && r.failed_task.is_some();
+                if retryable && self.cfg.max_retries > 0 {
+                    let n = attempts.entry(r.uid).or_insert(0);
+                    if *n < self.cfg.max_retries {
+                        *n += 1;
+                        log::info!("retrying task {} (attempt {})", r.uid, *n + 1);
+                        let task = r
+                            .failed_task
+                            .as_deref()
+                            .cloned()
+                            .expect("retry result retains its task");
+                        retry_buf.push((r, task));
+                        continue; // not terminal yet
+                    }
+                }
+                acc.terminal(r, &mut self.callback)?;
             }
-            acc.terminal(r, &mut self.callback)?;
         }
         // Disconnect fallback: if the channel died with retries still
         // buffered, their stored failures are the terminal outcomes.
@@ -319,6 +366,7 @@ impl Coordinator {
             timeline: acc.timeline,
             utilization: util,
             rate_per_s: rate,
+            retry_flush_stalls,
             results: acc.results,
         })
     }
@@ -386,6 +434,28 @@ mod tests {
         c.submit((0..n_tasks).map(fn_task)).unwrap();
         c.start().unwrap();
         c.join().unwrap()
+    }
+
+    #[test]
+    fn both_queue_impls_complete_end_to_end() {
+        for which in [
+            crate::coordinator::QueueImpl::Ring,
+            crate::coordinator::QueueImpl::Condvar,
+        ] {
+            let cfg = RaptorConfig {
+                bulk_size: 16,
+                queue_impl: which,
+                keep_results: true,
+                ..Default::default()
+            };
+            let mut c = Coordinator::new(cfg).unwrap();
+            c.submit((0..300).map(fn_task)).unwrap();
+            c.start().unwrap();
+            let report = c.join().unwrap();
+            assert_eq!(report.done, 300, "queue impl {which}");
+            let (pushed, pulled) = c.queue_counts();
+            assert_eq!(pushed, pulled, "queue impl {which}: conservation");
+        }
     }
 
     #[test]

@@ -115,10 +115,20 @@ pub const DEFAULT_BULK: usize = 128;
 /// latency — the double-buffering idea at task granularity).
 pub const REFILL_FRACTION: f64 = 0.5;
 
+/// The refill watermark as an integer count: pull a new bulk once the
+/// buffer holds fewer than this many tasks.  The integer form exists so
+/// the lock-free `TaskBuffer` can register it in an atomic and executor
+/// claims can compare against it without re-deriving floats; for integer
+/// buffer levels `buffered < watermark` is exactly the historical
+/// `buffered < max(bulk/2, slots)` float comparison.
+pub fn refill_watermark(slots: usize, bulk: usize) -> usize {
+    (bulk as f64 * REFILL_FRACTION).max(slots as f64).ceil() as usize
+}
+
 /// Should a worker with `buffered` tasks and `slots` execution slots pull
 /// another bulk of `bulk` tasks?
 pub fn should_refill(buffered: usize, slots: usize, bulk: usize) -> bool {
-    (buffered as f64) < (bulk as f64 * REFILL_FRACTION).max(slots as f64)
+    buffered < refill_watermark(slots, bulk)
 }
 
 #[cfg(test)]
@@ -174,5 +184,24 @@ mod tests {
         assert!(should_refill(63, 4, 128));
         // Never let the buffer fall under the slot count.
         assert!(should_refill(3, 4, 8));
+    }
+
+    #[test]
+    fn watermark_matches_float_threshold() {
+        // The integer watermark must reproduce the float comparison for
+        // every integer buffer level around the boundary.
+        for (slots, bulk) in [(4, 128), (4, 8), (2, 1), (8, 3), (1, 7)] {
+            let w = refill_watermark(slots, bulk);
+            assert!(w >= 1);
+            for buffered in 0..(2 * bulk + 2 * slots) {
+                let float_form =
+                    (buffered as f64) < (bulk as f64 * REFILL_FRACTION).max(slots as f64);
+                assert_eq!(
+                    should_refill(buffered, slots, bulk),
+                    float_form,
+                    "slots={slots} bulk={bulk} buffered={buffered}"
+                );
+            }
+        }
     }
 }

@@ -5,10 +5,11 @@
 //! Tasks move through two queues of different granularity:
 //!
 //! ```text
-//!  submit() ─▶ feeder ─▶ BulkQueue ──────▶ per-worker TaskBuffer ─▶ executor slots
-//!             (batches    (bounded,         (bounded, task-          (each owns its
-//!              into       bulk-granular,     granular, shared         PJRT engine)
-//!              bulks)      ZeroMQ stand-in)   by the worker's slots)
+//!  submit() ─▶ feeder ─▶ TaskQueue ──────▶ per-worker TaskBuffer ─▶ executor slots
+//!             (batches    (bounded,         (bulk segments,          (each owns its
+//!              into       bulk-granular,     atomic claim            PJRT engine;
+//!              bulks)      lock-free ring     cursors, lock-free      results leave in
+//!                          or condvar)        task claims)            batched bulks)
 //! ```
 //!
 //! * **Coordinator → worker** transfers happen in *bulks* (§III design
@@ -16,7 +17,66 @@
 //! * **worker → executor slot** handoff is *task-granular*: the worker's
 //!   slots share its [`worker::TaskBuffer`], so a long-tailed task holds
 //!   one slot while the rest of its bulk keeps flowing — bulked
-//!   transport without bulk-serial execution.
+//!   transport without bulk-serial execution;
+//! * **executor slot → collector** returns are bulked again: slots batch
+//!   up to [`worker::RESULT_BATCH`] results per channel send.
+//!
+//! # The lock-free hot path
+//!
+//! The paper's throughput holds only while "the rate of (de)queuing does
+//! not exceed the capabilities of the queue implementation" (§III).  At
+//! short task durations the seed's mutex+condvar hand-offs were that
+//! ceiling, so the three per-task hops above are lock-free in the steady
+//! state:
+//!
+//! 1. **[`queue::TaskQueue`]** — the coordinator queue, selected by
+//!    [`config::RaptorConfig::queue_impl`] (`--queue ring|condvar`):
+//!    either the baseline mutex+condvar [`queue::BulkQueue`] or the
+//!    default [`ring::RingQueue`], a Vyukov-style bounded MPMC ring of
+//!    bulks.  One CAS + one release store per bulk operation; parking is
+//!    a slow path reached only on empty/full.
+//! 2. **[`worker::TaskBuffer`]** — a pulled bulk is frozen into one
+//!    immutable *segment*; executor slots claim tasks by `fetch_add` on
+//!    the segment's cursor through a cached [`worker::TaskCursor`].  The
+//!    buffer mutex is touched only on segment transitions (~1/128
+//!    claims) and for parking.
+//! 3. **Result batching** — each slot accumulates results locally and
+//!    flushes them as one `Vec<TaskResult>` per [`worker::RESULT_BATCH`]
+//!    results (and always before blocking on an empty buffer, so `join`'s
+//!    counting never deadlocks against a parked slot holding results).
+//!
+//! ## Why bulks move as one allocation
+//!
+//! A bulk is a `Vec<T>` everywhere: three words in a ring slot, one
+//! boxed-slice segment in the buffer, one channel message of results.
+//! Moving 128 tasks therefore costs the same synchronization as moving
+//! one — the contended structures see per-*bulk* traffic while executors
+//! see per-*task* granularity.  This is the paper's design choice 5
+//! carried through the whole pipeline instead of just the network hop.
+//!
+//! ## Memory-ordering contract
+//!
+//! The rules the lock-free structures rely on (details at each type):
+//!
+//! * **Payload hand-off is Acquire/Release on exactly one atomic.**  The
+//!   ring publishes a bulk with a Release store to the slot's sequence
+//!   counter and consumers Acquire-load it; segments publish under the
+//!   buffer mutex and claims need only the uniqueness of `fetch_add`
+//!   indices.  Cursors/counters themselves are Relaxed — they order
+//!   nothing but their own value.
+//! * **Close linearizes against producers.**  `RingQueue::close` folds a
+//!   closed bit into the producer cursor with `fetch_or(SeqCst)`, so
+//!   every claim CAS after it fails; "closed and drained" is therefore a
+//!   stable terminal condition and queue `pushed == pulled` is exact
+//!   after teardown.
+//! * **Parking uses the registered-waiter (eventcount) protocol.**  A
+//!   waiter registers itself, then re-checks the condition; a committing
+//!   thread performs its operation, then checks for waiters (both sides
+//!   separated by `SeqCst` fences or `SeqCst` RMWs).  In the SC total
+//!   order one side always observes the other, so no wakeup is lost, and
+//!   the fast path pays one fence + one relaxed load instead of a lock.
+//!
+//! # Dispatch policies
 //!
 //! How bulks reach the worker buffers is the [`Policy`] ablation:
 //!
@@ -40,26 +100,29 @@
 //!
 //! * executed tasks report `Done`/`Failed` from their executor slot;
 //! * on `stop()`, executors drain buffered tasks as `Canceled`, the
-//!   refill/dispatch threads drain the closed `BulkQueue` into the
-//!   buffers (so queue `pushed == pulled` always holds after teardown),
-//!   and the feeder reports tasks the closed queue refused — including
-//!   the final partial bulk — as `Canceled`;
+//!   refill/dispatch threads drain the closed queue into the buffers
+//!   (so queue `pushed == pulled` always holds after teardown), and the
+//!   feeder reports tasks the closed queue refused — including the
+//!   final partial bulk — as `Canceled`;
 //! * failed tasks with retry budget are resubmitted in batched bulks via
-//!   a non-blocking push from `join`'s collector loop; when the queue is
+//!   a non-blocking push from `join`'s collector loop, with capped
+//!   exponential backoff when the queue is saturated; when the queue is
 //!   closed before the flush succeeds, the buffered failure is counted
 //!   as the terminal `Failed` outcome.
 //!
 //! `tests/prop_invariants.rs` exercises this invariant over randomized
-//! submit/start/stop interleavings, policies, failures and retries.
+//! submit/start/stop interleavings, policies, failures and retries —
+//! against **both** queue implementations.
 //!
 //! # Modules
 //!
 //! * [`coordinator::Coordinator`] — real-mode coordinator with the paper's
 //!   `submit` / `start` / `join` / `stop` API;
-//! * [`worker::WorkerPool`] — per-worker task buffers + executor slots,
-//!   each slot owning its PJRT engine;
-//! * [`queue::BulkQueue`] — the bounded bulk MPMC queue (ZeroMQ stand-in)
-//!   and its simulator rate model;
+//! * [`worker::WorkerPool`] — per-worker segmented task buffers +
+//!   executor slots, each slot owning its PJRT engine;
+//! * [`queue`] — the [`queue::TaskQueue`] facade, the condvar
+//!   [`queue::BulkQueue`] baseline, and the simulator rate model;
+//! * [`ring`] — the lock-free [`ring::RingQueue`];
 //! * [`partition::Partition`] — node partitioning across coordinators
 //!   (§III design choice 3);
 //! * [`dispatch`] — the dispatch policies and the refill hysteresis.
@@ -70,11 +133,15 @@ pub mod coordinator;
 pub mod dispatch;
 pub mod partition;
 pub mod queue;
+pub mod ring;
 pub mod worker;
 
 pub use config::{EngineKind, RaptorConfig};
 pub use coordinator::{Coordinator, ResultCallback, RunReport};
-pub use dispatch::{should_refill, Dispatcher, Policy, DEFAULT_BULK, REFILL_FRACTION};
+pub use dispatch::{
+    refill_watermark, should_refill, Dispatcher, Policy, DEFAULT_BULK, REFILL_FRACTION,
+};
 pub use partition::Partition;
-pub use queue::{BulkQueue, QueueModel, TryPushError};
-pub use worker::{TaskBuffer, WorkerPool, MAX_SYNTHETIC_SLEEP_S};
+pub use queue::{BulkQueue, QueueImpl, QueueModel, TaskQueue, TryPushError};
+pub use ring::RingQueue;
+pub use worker::{TaskBuffer, TaskCursor, TryPop, WorkerPool, MAX_SYNTHETIC_SLEEP_S, RESULT_BATCH};

@@ -6,9 +6,14 @@
 //! (de)queuing does not exceed the capabilities of the queue
 //! implementation and of the used network" (§III, ZeroMQ in the original).
 //!
-//! Two artifacts here:
-//! * [`BulkQueue`] — the real-mode bounded MPMC queue of task *bulks*
-//!   (design choice 5: tasks travel in bulk, default 128/bulk);
+//! Three artifacts here:
+//! * [`BulkQueue`] — the mutex+condvar bounded MPMC queue of task *bulks*
+//!   (design choice 5: tasks travel in bulk, default 128/bulk) — the
+//!   baseline implementation and the reference semantics;
+//! * [`TaskQueue`] — the facade real mode actually holds: dispatches to
+//!   [`BulkQueue`] or the lock-free [`super::ring::RingQueue`] per
+//!   [`QueueImpl`] (`RaptorConfig::queue_impl`, `--queue ring|condvar`),
+//!   so the conservation tests and benches run against both;
 //! * [`QueueModel`] — the simulator's rate/latency model of the same
 //!   queue, used to study coordinator counts (ablation: too few
 //!   coordinators → dequeue contention → worker starvation).
@@ -16,6 +21,113 @@
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
+
+use super::ring::RingQueue;
+
+/// Which bulk-queue implementation the dispatch hot path uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueImpl {
+    /// Mutex + condvar [`BulkQueue`] (the PR-1 baseline).
+    Condvar,
+    /// Lock-free atomic-cursor [`RingQueue`] (default).
+    Ring,
+}
+
+impl QueueImpl {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "condvar" => Ok(Self::Condvar),
+            "ring" => Ok(Self::Ring),
+            other => anyhow::bail!("unknown queue impl {other:?} (ring|condvar)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Condvar => "condvar",
+            Self::Ring => "ring",
+        }
+    }
+}
+
+impl std::fmt::Display for QueueImpl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The queue real mode holds: one contract, two implementations.
+/// Static dispatch (an enum, not a trait object) keeps the per-call cost
+/// to a predictable branch — this is the hot path being measured.
+pub enum TaskQueue<T> {
+    Condvar(BulkQueue<T>),
+    Ring(RingQueue<T>),
+}
+
+impl<T> TaskQueue<T> {
+    pub fn new(which: QueueImpl, capacity: usize) -> Self {
+        match which {
+            QueueImpl::Condvar => Self::Condvar(BulkQueue::new(capacity)),
+            QueueImpl::Ring => Self::Ring(RingQueue::new(capacity)),
+        }
+    }
+
+    pub fn push_bulk(&self, bulk: Vec<T>) -> Result<(), Vec<T>> {
+        match self {
+            Self::Condvar(q) => q.push_bulk(bulk),
+            Self::Ring(q) => q.push_bulk(bulk),
+        }
+    }
+
+    pub fn try_push_bulk(&self, bulk: Vec<T>) -> Result<(), TryPushError<T>> {
+        match self {
+            Self::Condvar(q) => q.try_push_bulk(bulk),
+            Self::Ring(q) => q.try_push_bulk(bulk),
+        }
+    }
+
+    pub fn pull_bulk(&self) -> Option<Vec<T>> {
+        match self {
+            Self::Condvar(q) => q.pull_bulk(),
+            Self::Ring(q) => q.pull_bulk(),
+        }
+    }
+
+    pub fn pull_bulk_timeout(&self, timeout: Duration) -> Option<Vec<T>> {
+        match self {
+            Self::Condvar(q) => q.pull_bulk_timeout(timeout),
+            Self::Ring(q) => q.pull_bulk_timeout(timeout),
+        }
+    }
+
+    pub fn close(&self) {
+        match self {
+            Self::Condvar(q) => q.close(),
+            Self::Ring(q) => q.close(),
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        match self {
+            Self::Condvar(q) => q.is_closed(),
+            Self::Ring(q) => q.is_closed(),
+        }
+    }
+
+    pub fn counts(&self) -> (u64, u64) {
+        match self {
+            Self::Condvar(q) => q.counts(),
+            Self::Ring(q) => q.counts(),
+        }
+    }
+
+    pub fn backlog_bulks(&self) -> usize {
+        match self {
+            Self::Condvar(q) => q.backlog_bulks(),
+            Self::Ring(q) => q.backlog_bulks(),
+        }
+    }
+}
 
 /// Why a [`BulkQueue::try_push_bulk`] was refused; the bulk is handed
 /// back so no task is ever dropped on a failed push.
@@ -300,6 +412,33 @@ mod tests {
         assert_eq!(q.pull_bulk(), Some(vec![1]));
         t.join().unwrap();
         assert_eq!(q.pull_bulk(), Some(vec![2]));
+    }
+
+    #[test]
+    fn facade_contract_over_both_impls() {
+        for which in [QueueImpl::Condvar, QueueImpl::Ring] {
+            let q = TaskQueue::new(which, 1);
+            q.push_bulk(vec![1, 2]).unwrap();
+            match q.try_push_bulk(vec![3]) {
+                Err(TryPushError::Full(b)) => assert_eq!(b, vec![3]),
+                other => panic!("{which}: expected Full, got {other:?}"),
+            }
+            assert_eq!(q.backlog_bulks(), 1);
+            assert_eq!(q.pull_bulk(), Some(vec![1, 2]));
+            q.close();
+            assert!(q.is_closed());
+            assert!(q.push_bulk(vec![4]).is_err());
+            assert_eq!(q.pull_bulk(), None);
+            assert_eq!(q.counts(), (2, 2), "{which}: conservation");
+        }
+    }
+
+    #[test]
+    fn queue_impl_parses() {
+        assert_eq!(QueueImpl::parse("ring").unwrap(), QueueImpl::Ring);
+        assert_eq!(QueueImpl::parse("condvar").unwrap(), QueueImpl::Condvar);
+        assert!(QueueImpl::parse("lockless").is_err());
+        assert_eq!(QueueImpl::Ring.to_string(), "ring");
     }
 
     #[test]

@@ -2,14 +2,14 @@
 //! as the paper's two-level dispatch design.
 //!
 //! ```text
-//!   coordinator BulkQueue ──(bulk granularity)──▶ per-worker TaskBuffer
+//!   coordinator TaskQueue ──(bulk granularity)──▶ per-worker TaskBuffer
 //!        │                                            │
-//!        │  PullBased: worker refill loop pulls a     │ (task granularity)
-//!        │  bulk when `should_refill` hits the        ▼
+//!        │  PullBased: worker refill loop pulls a     │ (task granularity,
+//!        │  bulk when `should_refill` hits the        ▼  lock-free claims)
 //!        │  prefetch watermark                  executor slots
 //!        │  RoundRobin/LeastLoaded: coordinator  (each owns its PJRT
-//!        │  dispatcher thread pushes to chosen    engine)
-//!        │  worker                 ▲
+//!        │  dispatcher thread pushes to chosen    engine; results leave
+//!        │  worker                 ▲              in batched bulks)
 //!        └──────────────────────────┘
 //! ```
 //!
@@ -17,9 +17,15 @@
 //! choice 5), but execute at *task* granularity: a worker's executor
 //! slots share the worker's bounded [`TaskBuffer`], so one long-tailed
 //! task occupies one slot while its bulk-siblings keep flowing to the
-//! other slots.  (The seed implementation ran each pulled bulk serially
-//! on one executor thread, which is exactly the head-of-line blocking
-//! the paper's dynamic dispatch exists to avoid.)
+//! other slots.
+//!
+//! The per-task hot path is lock-free end to end: a pulled bulk becomes
+//! one immutable [`TaskBuffer`] *segment*, executor slots claim tasks by
+//! bumping the segment's atomic cursor (the buffer mutex is touched only
+//! on segment transitions, ~1/128 claims), and finished results
+//! accumulate in a slot-local batch flushed to the collector as one
+//! channel send per [`RESULT_BATCH`] results.  See the module docs in
+//! [`super`] for the full memory-ordering contract.
 //!
 //! Every task handed to a worker produces exactly one terminal
 //! [`TaskResult`] — including across cancellation, where queued work is
@@ -27,8 +33,10 @@
 //! invariant (`submitted == done + failed + canceled`) is what the
 //! coordinator's accounting builds on.
 
+use std::cell::UnsafeCell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -38,8 +46,8 @@ use crate::task::{TaskDesc, TaskKind, TaskResult, TaskState};
 use crate::util::rng::SplitMix64;
 
 use super::config::{EngineKind, RaptorConfig};
-use super::dispatch::{should_refill, Dispatcher, Policy};
-use super::queue::BulkQueue;
+use super::dispatch::{refill_watermark, Dispatcher, Policy};
+use super::queue::TaskQueue;
 
 /// Synthetic executable tasks (`command == []`) sleep for their scaled
 /// `sim_duration`, silently clamped to this many seconds.  The clamp is a
@@ -49,11 +57,111 @@ use super::queue::BulkQueue;
 /// `RaptorConfig::exec_time_scale` instead of relying on the clamp.
 pub const MAX_SYNTHETIC_SLEEP_S: f64 = 10.0;
 
+/// Executor slots flush their local result batch to the collector once it
+/// holds this many results (and always before blocking on an empty
+/// buffer), amortizing the collector channel to one send per batch.
+/// Matches the paper's bulk size: results leave the worker with the same
+/// granularity tasks arrive.
+pub const RESULT_BATCH: usize = 128;
+
+/// One pulled bulk, frozen into a claimable array.  Executor slots claim
+/// tasks by `fetch_add` on `next`; a claimed index is owned exclusively
+/// by the claiming slot, so the value read needs no further
+/// synchronization (the segment's contents were written before the
+/// segment was published under the buffer mutex, and cursors only learn
+/// about segments through that mutex).
+struct Segment<T> {
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    /// Claim cursor; may overshoot `slots.len()` when racing slots probe
+    /// an exhausted segment — claims past the end are simply invalid.
+    next: AtomicUsize,
+}
+
+// Claims move T across threads; the UnsafeCell is only read at the
+// uniquely claimed index.
+unsafe impl<T: Send> Send for Segment<T> {}
+unsafe impl<T: Send> Sync for Segment<T> {}
+
+impl<T> Segment<T> {
+    fn new(tasks: Vec<T>) -> Self {
+        let slots: Box<[UnsafeCell<MaybeUninit<T>>]> = tasks
+            .into_iter()
+            .map(|t| UnsafeCell::new(MaybeUninit::new(t)))
+            .collect();
+        Self {
+            slots,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Claim one task, or `None` if the segment is exhausted.  Relaxed
+    /// suffices: publication happens-before every claim via the buffer
+    /// mutex, and `fetch_add` hands out each index at most once.
+    fn claim(&self) -> Option<T> {
+        if self.next.load(Ordering::Relaxed) >= self.slots.len() {
+            return None;
+        }
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.slots.len() {
+            Some(unsafe { (*self.slots[i].get()).assume_init_read() })
+        } else {
+            None
+        }
+    }
+}
+
+impl<T> Drop for Segment<T> {
+    fn drop(&mut self) {
+        // Indices below the cursor were moved out by claims; the rest
+        // are still live and must be dropped here.
+        let len = self.slots.len();
+        let start = (*self.next.get_mut()).min(len);
+        for slot in &mut self.slots[start..len] {
+            unsafe { slot.get_mut().assume_init_drop() };
+        }
+    }
+}
+
+/// Per-executor handle into a [`TaskBuffer`]: caches the segment the
+/// slot is currently claiming from, so consecutive claims skip the
+/// buffer mutex entirely.
+pub struct TaskCursor<T> {
+    seg: Option<Arc<Segment<T>>>,
+}
+
+impl<T> TaskCursor<T> {
+    pub fn new() -> Self {
+        Self { seg: None }
+    }
+}
+
+impl<T> Default for TaskCursor<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Result of a non-blocking [`TaskBuffer::try_pop`].
+pub enum TryPop<T> {
+    Task(T),
+    /// Nothing claimable right now; the caller may block in `pop` (after
+    /// flushing any buffered results — see `executor_loop`).
+    Empty,
+    /// Closed and drained: terminal.
+    Closed,
+}
+
 /// A worker's bounded, task-granular local buffer, shared by its
 /// executor slots (and filled by a refill loop or the coordinator's
 /// dispatcher, depending on the dispatch policy).
 ///
-/// Semantics:
+/// Structure: a mutex-guarded list of immutable [`Segment`]s (one per
+/// pushed bulk) plus an atomic `buffered` gauge.  The per-task claim
+/// path never takes the mutex — slots claim by atomic cursor inside
+/// their cached segment and only fall back to the lock to move to the
+/// next segment or to park.
+///
+/// Semantics (unchanged from the mutex-era buffer):
 /// * [`push_many`](Self::push_many) admits a whole bulk once *any*
 ///   capacity is free (temporary overshoot beats deadlocking on bulks
 ///   larger than the buffer) and blocks while full;
@@ -61,6 +169,13 @@ pub const MAX_SYNTHETIC_SLEEP_S: f64 = 10.0;
 ///   available or the buffer is closed and drained;
 /// * closing wakes every waiter; a rejected `push_many` returns the
 ///   tasks so the caller can account for them.
+///
+/// Waiter wakeups from the lock-free claim path use the registered-
+/// waiter protocol: waiters publish themselves (`refill_threshold`,
+/// `push_waiters`) *before* re-checking `buffered`, claims decrement
+/// `buffered` *before* loading the waiter registers, and every access
+/// in that window is `SeqCst` — in the SC total order one side always
+/// sees the other, so no wakeup is lost.
 pub struct TaskBuffer<T> {
     inner: Mutex<BufInner<T>>,
     /// Executors wait here for tasks.
@@ -70,10 +185,17 @@ pub struct TaskBuffer<T> {
     /// The worker's refill loop waits here for the low watermark.
     low: Condvar,
     capacity: usize,
+    /// Tasks pushed but not yet claimed (the load gauge and the
+    /// watermark/capacity signal, readable without the lock).
+    buffered: AtomicUsize,
+    /// Watermark a parked refill loop is waiting under; 0 = no waiter.
+    refill_threshold: AtomicUsize,
+    /// Pushers parked on `not_full`.
+    push_waiters: AtomicUsize,
 }
 
 struct BufInner<T> {
-    tasks: VecDeque<T>,
+    segments: VecDeque<Arc<Segment<T>>>,
     closed: bool,
 }
 
@@ -82,13 +204,37 @@ impl<T> TaskBuffer<T> {
         assert!(capacity > 0);
         Self {
             inner: Mutex::new(BufInner {
-                tasks: VecDeque::new(),
+                segments: VecDeque::new(),
                 closed: false,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             low: Condvar::new(),
             capacity,
+            buffered: AtomicUsize::new(0),
+            refill_threshold: AtomicUsize::new(0),
+            push_waiters: AtomicUsize::new(0),
+        }
+    }
+
+    /// Bookkeeping after a lock-free claim: drop the gauge, then wake the
+    /// refill loop / a parked pusher if the claim crossed their
+    /// thresholds.  The decrement is `SeqCst` so it orders against the
+    /// waiter registers (see the struct docs).
+    fn after_claim(&self) {
+        let remaining = self.buffered.fetch_sub(1, Ordering::SeqCst) - 1;
+        let thr = self.refill_threshold.load(Ordering::SeqCst);
+        let wake_low = thr != 0 && remaining < thr;
+        let wake_full =
+            self.push_waiters.load(Ordering::SeqCst) != 0 && remaining < self.capacity;
+        if wake_low || wake_full {
+            let _g = self.inner.lock().unwrap();
+            if wake_low {
+                self.low.notify_all();
+            }
+            if wake_full {
+                self.not_full.notify_all();
+            }
         }
     }
 
@@ -100,23 +246,60 @@ impl<T> TaskBuffer<T> {
             if g.closed {
                 return Err(tasks);
             }
-            if g.tasks.len() < self.capacity {
-                g.tasks.extend(tasks);
+            if self.buffered.load(Ordering::SeqCst) < self.capacity {
+                let n = tasks.len();
+                g.segments.push_back(Arc::new(Segment::new(tasks)));
+                self.buffered.fetch_add(n, Ordering::SeqCst);
                 self.not_empty.notify_all();
                 return Ok(());
             }
+            // Register before re-checking: a claim that empties capacity
+            // after our check must see the registration and notify.
+            self.push_waiters.fetch_add(1, Ordering::SeqCst);
+            if self.buffered.load(Ordering::SeqCst) < self.capacity {
+                self.push_waiters.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
             g = self.not_full.wait(g).unwrap();
+            self.push_waiters.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Non-blocking claim.  The fast path (cached segment still live)
+    /// touches no lock; the slow path takes the lock once to advance to
+    /// the next segment.
+    pub fn try_pop(&self, cur: &mut TaskCursor<T>) -> TryPop<T> {
+        if let Some(seg) = &cur.seg {
+            if let Some(task) = seg.claim() {
+                self.after_claim();
+                return TryPop::Task(task);
+            }
+            cur.seg = None; // exhausted; forget it
+        }
+        let mut g = self.inner.lock().unwrap();
+        if let Some(task) = self.claim_locked(&mut g, cur) {
+            return TryPop::Task(task);
+        }
+        if g.closed {
+            TryPop::Closed
+        } else {
+            TryPop::Empty
         }
     }
 
     /// Take one task; blocks until available.  `None` once the buffer is
     /// closed and drained.
-    pub fn pop(&self) -> Option<T> {
+    pub fn pop(&self, cur: &mut TaskCursor<T>) -> Option<T> {
+        if let Some(seg) = &cur.seg {
+            if let Some(task) = seg.claim() {
+                self.after_claim();
+                return Some(task);
+            }
+            cur.seg = None;
+        }
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(task) = g.tasks.pop_front() {
-                self.not_full.notify_one();
-                self.low.notify_one();
+            if let Some(task) = self.claim_locked(&mut g, cur) {
                 return Some(task);
             }
             if g.closed {
@@ -126,19 +309,48 @@ impl<T> TaskBuffer<T> {
         }
     }
 
+    /// Claim from the segment list under the lock, pruning exhausted
+    /// segments and re-pointing the cursor at the live one.  Waiter
+    /// wakeups happen directly under the held lock (calling
+    /// `after_claim` here would self-deadlock on `inner`).
+    fn claim_locked(&self, g: &mut BufInner<T>, cur: &mut TaskCursor<T>) -> Option<T> {
+        while let Some(front) = g.segments.front() {
+            if let Some(task) = front.claim() {
+                cur.seg = Some(front.clone());
+                self.buffered.fetch_sub(1, Ordering::SeqCst);
+                self.low.notify_all();
+                self.not_full.notify_all();
+                return Some(task);
+            }
+            g.segments.pop_front();
+        }
+        None
+    }
+
     /// Block until the buffer needs a refill (`should_refill` watermark),
     /// the pool is canceling (drain fast, skip the hysteresis), or the
     /// buffer is closed.  Returns `false` exactly when closed.
     pub fn wait_refill(&self, slots: usize, bulk: usize, cancel: &AtomicBool) -> bool {
+        let watermark = refill_watermark(slots, bulk);
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.closed {
                 return false;
             }
-            if cancel.load(Ordering::SeqCst) || should_refill(g.tasks.len(), slots, bulk) {
+            if cancel.load(Ordering::SeqCst)
+                || self.buffered.load(Ordering::SeqCst) < watermark
+            {
+                return true;
+            }
+            // Register the watermark, then re-check: a claim landing
+            // between check and wait must observe the registration.
+            self.refill_threshold.store(watermark, Ordering::SeqCst);
+            if self.buffered.load(Ordering::SeqCst) < watermark {
+                self.refill_threshold.store(0, Ordering::SeqCst);
                 return true;
             }
             g = self.low.wait(g).unwrap();
+            self.refill_threshold.store(0, Ordering::SeqCst);
         }
     }
 
@@ -153,14 +365,17 @@ impl<T> TaskBuffer<T> {
     }
 
     /// Wake a refill loop parked on the watermark (used by cancel so the
-    /// drain starts immediately instead of at the next pop).
+    /// drain starts immediately instead of at the next claim).  Takes
+    /// the park lock so the wakeup cannot land between a waiter's check
+    /// and its wait.
     fn interrupt_refill(&self) {
+        let _g = self.inner.lock().unwrap();
         self.low.notify_all();
     }
 
     /// Currently buffered task count (the push policies' load signal).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().tasks.len()
+        self.buffered.load(Ordering::SeqCst)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -170,7 +385,7 @@ impl<T> TaskBuffer<T> {
 
 /// Shared handle the coordinator uses to control its workers.
 pub struct WorkerPool {
-    pub queue: Arc<BulkQueue<TaskDesc>>,
+    pub queue: Arc<TaskQueue<TaskDesc>>,
     pub cancel: Arc<AtomicBool>,
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Executors that finished their engine bootstrap.
@@ -189,8 +404,8 @@ impl WorkerPool {
     /// ablations (`RaptorConfig::validate` rejects it before this).
     pub fn spawn(
         cfg: &RaptorConfig,
-        queue: Arc<BulkQueue<TaskDesc>>,
-        results: Sender<TaskResult>,
+        queue: Arc<TaskQueue<TaskDesc>>,
+        results: Sender<Vec<TaskResult>>,
         t0: Instant,
     ) -> Self {
         let cancel = Arc::new(AtomicBool::new(false));
@@ -299,12 +514,12 @@ impl WorkerPool {
 #[allow(clippy::too_many_arguments)]
 fn refill_loop(
     worker_id: u32,
-    queue: &BulkQueue<TaskDesc>,
+    queue: &TaskQueue<TaskDesc>,
     buffer: &TaskBuffer<TaskDesc>,
     slots: usize,
     bulk_size: usize,
     cancel: &AtomicBool,
-    results: &Sender<TaskResult>,
+    results: &Sender<Vec<TaskResult>>,
     t0: Instant,
 ) {
     loop {
@@ -332,10 +547,10 @@ fn refill_loop(
 /// blocking under long tails — the point of the ablation); least-loaded
 /// tracks it.
 fn dispatch_loop(
-    queue: &BulkQueue<TaskDesc>,
+    queue: &TaskQueue<TaskDesc>,
     buffers: &[Arc<TaskBuffer<TaskDesc>>],
     mut dispatcher: Dispatcher,
-    results: &Sender<TaskResult>,
+    results: &Sender<Vec<TaskResult>>,
     t0: Instant,
 ) {
     while let Some(tasks) = queue.pull_bulk() {
@@ -350,25 +565,49 @@ fn dispatch_loop(
     }
 }
 
-/// Emit `Canceled` terminal results for tasks that can no longer reach an
-/// executor (send failures are ignored: if the collector is gone there is
-/// no accounting left to preserve).
-fn cancel_all(tasks: Vec<TaskDesc>, worker_id: u32, results: &Sender<TaskResult>, t0: Instant) {
-    let now = t0.elapsed().as_secs_f64();
-    for task in tasks {
-        let _ = results.send(TaskResult::canceled(task.uid, now, worker_id));
+/// Emit `Canceled` terminal results — as one result-bulk — for tasks
+/// that can no longer reach an executor (send failures are ignored: if
+/// the collector is gone there is no accounting left to preserve).
+fn cancel_all(
+    tasks: Vec<TaskDesc>,
+    worker_id: u32,
+    results: &Sender<Vec<TaskResult>>,
+    t0: Instant,
+) {
+    if tasks.is_empty() {
+        return;
     }
+    let now = t0.elapsed().as_secs_f64();
+    let bulk: Vec<TaskResult> = tasks
+        .into_iter()
+        .map(|task| TaskResult::canceled(task.uid, now, worker_id))
+        .collect();
+    let _ = results.send(bulk);
 }
 
-/// One executor slot: bootstrap the engine, then run tasks one at a time
-/// from the worker's shared buffer until it closes.
+/// Flush a slot-local result batch as one result-bulk.  Returns `false`
+/// if the collector hung up.
+fn flush_results(batch: &mut Vec<TaskResult>, results: &Sender<Vec<TaskResult>>) -> bool {
+    if batch.is_empty() {
+        return true;
+    }
+    results.send(std::mem::take(batch)).is_ok()
+}
+
+/// One executor slot: bootstrap the engine, then claim tasks one at a
+/// time from the worker's shared buffer until it closes.  Results are
+/// batched ([`RESULT_BATCH`]) and always flushed before blocking on an
+/// empty buffer — `join` counts results to converge, so a slot must
+/// never park on task arrival while holding results the collector has
+/// not seen.  (Timestamps are recorded per task at execution time, so
+/// batching never skews the timeline.)
 #[allow(clippy::too_many_arguments)]
 fn executor_loop(
     worker_id: u32,
     engine_kind: EngineKind,
     exec_time_scale: f64,
     buffer: &TaskBuffer<TaskDesc>,
-    results: &Sender<TaskResult>,
+    results: &Sender<Vec<TaskResult>>,
     cancel: &AtomicBool,
     ready: &AtomicU64,
     t0: Instant,
@@ -393,20 +632,40 @@ fn executor_loop(
     };
     ready.fetch_add(1, Ordering::SeqCst);
 
-    while let Some(task) = buffer.pop() {
+    let mut cursor = TaskCursor::new();
+    let mut batch: Vec<TaskResult> = Vec::with_capacity(RESULT_BATCH);
+    loop {
+        let task = match buffer.try_pop(&mut cursor) {
+            TryPop::Task(t) => Some(t),
+            TryPop::Closed => None,
+            TryPop::Empty => {
+                // About to park: hand the collector what we have so its
+                // counting (and the feeder behind it) keeps moving.
+                if !flush_results(&mut batch, results) {
+                    buffer.close();
+                    return;
+                }
+                buffer.pop(&mut cursor)
+            }
+        };
+        let Some(task) = task else { break };
         let started = t0.elapsed().as_secs_f64();
         let result = if cancel.load(Ordering::SeqCst) {
             TaskResult::canceled(task.uid, started, worker_id)
         } else {
             run_task(&task, engine_kind, engine.as_mut(), exec_time_scale, worker_id, started, t0)
         };
-        if results.send(result).is_err() {
+        batch.push(result);
+        if batch.len() >= RESULT_BATCH && !flush_results(&mut batch, results) {
             // Collector gone: close the buffer so the worker's other
             // threads (and its refill loop) unwind instead of filling a
             // buffer nobody drains.
             buffer.close();
             return;
         }
+    }
+    if !flush_results(&mut batch, results) {
+        buffer.close();
     }
 }
 
@@ -493,8 +752,9 @@ pub fn synthetic_scores(call: &crate::task::DockCall) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::queue::QueueImpl;
     use crate::task::DockCall;
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::{channel, Receiver};
     use std::time::Duration;
 
     fn call(first: u64, bundle: u32) -> DockCall {
@@ -518,19 +778,42 @@ mod tests {
         }
     }
 
+    /// Drain `n` results from the batched channel.
+    fn recv_n(rx: &Receiver<Vec<TaskResult>>, n: usize) -> Vec<TaskResult> {
+        let mut got = Vec::with_capacity(n);
+        while got.len() < n {
+            got.extend(rx.recv().expect("result channel closed early"));
+        }
+        assert_eq!(got.len(), n, "over-delivery");
+        got
+    }
+
     #[test]
     fn buffer_push_pop_close() {
         let b: TaskBuffer<u64> = TaskBuffer::new(4);
+        let mut cur = TaskCursor::new();
         b.push_many(vec![1, 2, 3]).unwrap();
         assert_eq!(b.len(), 3);
-        assert_eq!(b.pop(), Some(1));
+        assert_eq!(b.pop(&mut cur), Some(1));
         b.close();
         // Drain continues after close...
-        assert_eq!(b.pop(), Some(2));
-        assert_eq!(b.pop(), Some(3));
-        assert_eq!(b.pop(), None);
+        assert_eq!(b.pop(&mut cur), Some(2));
+        assert_eq!(b.pop(&mut cur), Some(3));
+        assert_eq!(b.pop(&mut cur), None);
         // ...but new pushes bounce back.
         assert_eq!(b.push_many(vec![9]), Err(vec![9]));
+    }
+
+    #[test]
+    fn buffer_try_pop_states() {
+        let b: TaskBuffer<u64> = TaskBuffer::new(4);
+        let mut cur = TaskCursor::new();
+        assert!(matches!(b.try_pop(&mut cur), TryPop::Empty));
+        b.push_many(vec![7]).unwrap();
+        assert!(matches!(b.try_pop(&mut cur), TryPop::Task(7)));
+        assert!(matches!(b.try_pop(&mut cur), TryPop::Empty));
+        b.close();
+        assert!(matches!(b.try_pop(&mut cur), TryPop::Closed));
     }
 
     #[test]
@@ -550,7 +833,8 @@ mod tests {
         let t = std::thread::spawn(move || b2.push_many(vec![3]).is_ok());
         std::thread::sleep(Duration::from_millis(30));
         assert_eq!(b.len(), 2, "pusher must be blocked at capacity");
-        assert_eq!(b.pop(), Some(1));
+        let mut cur = TaskCursor::new();
+        assert_eq!(b.pop(&mut cur), Some(1));
         assert!(t.join().unwrap());
     }
 
@@ -559,15 +843,16 @@ mod tests {
         let b: Arc<TaskBuffer<u64>> = Arc::new(TaskBuffer::new(64));
         let cancel = Arc::new(AtomicBool::new(false));
         // 16 buffered >= watermark max(8, 2): wait_refill must block
-        // until pops cross the watermark.
+        // until claims cross the watermark.
         b.push_many((0..16).collect()).unwrap();
         let b2 = b.clone();
         let c2 = cancel.clone();
         let t = std::thread::spawn(move || b2.wait_refill(2, 16, &c2));
         std::thread::sleep(Duration::from_millis(30));
         assert!(!t.is_finished(), "refill must wait above the watermark");
+        let mut cur = TaskCursor::new();
         for _ in 0..9 {
-            b.pop().unwrap();
+            b.pop(&mut cur).unwrap();
         }
         assert!(t.join().unwrap(), "below watermark -> refill");
         // Closed buffer: refill loop must stop.
@@ -576,37 +861,79 @@ mod tests {
     }
 
     #[test]
+    fn buffer_concurrent_claims_unique() {
+        // 4 claimers racing over segmented bulks: every task claimed
+        // exactly once, across the lock-free and locked claim paths.
+        let b: Arc<TaskBuffer<u64>> = Arc::new(TaskBuffer::new(1024));
+        let claimers: Vec<_> = (0..4)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    let mut cur = TaskCursor::new();
+                    let mut got = Vec::new();
+                    while let Some(v) = b.pop(&mut cur) {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for chunk in 0..40u64 {
+            b.push_many((chunk * 25..(chunk + 1) * 25).collect()).unwrap();
+        }
+        b.close();
+        let mut all: Vec<u64> = claimers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<u64>>());
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn segment_drops_unclaimed_tasks() {
+        // Claim half a segment, then drop the buffer: the unclaimed half
+        // must drop cleanly (no leak, no double-drop of claimed values).
+        let b: TaskBuffer<String> = TaskBuffer::new(8);
+        b.push_many((0..6).map(|i| i.to_string()).collect()).unwrap();
+        let mut cur = TaskCursor::new();
+        for _ in 0..3 {
+            b.pop(&mut cur).unwrap();
+        }
+        drop(b);
+    }
+
+    #[test]
     fn synthetic_pool_completes_all_tasks() {
-        let queue = Arc::new(BulkQueue::new(4));
-        let (tx, rx) = channel();
-        let cfg = pool_cfg(2, 2, 0.0, Policy::PullBased);
-        let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
-        for b in 0..10u64 {
-            let bulk: Vec<TaskDesc> = (0..16)
-                .map(|i| TaskDesc::function(b * 16 + i, call((b * 16 + i) * 8, 8)))
-                .collect();
-            queue.push_bulk(bulk).unwrap();
+        for which in [QueueImpl::Ring, QueueImpl::Condvar] {
+            let queue = Arc::new(TaskQueue::new(which, 4));
+            let (tx, rx) = channel();
+            let cfg = pool_cfg(2, 2, 0.0, Policy::PullBased);
+            let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
+            for b in 0..10u64 {
+                let bulk: Vec<TaskDesc> = (0..16)
+                    .map(|i| TaskDesc::function(b * 16 + i, call((b * 16 + i) * 8, 8)))
+                    .collect();
+                queue.push_bulk(bulk).unwrap();
+            }
+            queue.close();
+            let got = recv_n(&rx, 160);
+            pool.join();
+            assert!(got.iter().all(|r| r.state == TaskState::Done));
+            assert!(got.iter().all(|r| r.scores.len() == 8));
+            let mut uids: Vec<u64> = got.iter().map(|r| r.uid).collect();
+            uids.sort_unstable();
+            assert_eq!(uids, (0..160).collect::<Vec<u64>>());
+            let (pushed, pulled) = queue.counts();
+            assert_eq!(pushed, pulled, "{which}: refill loops must drain the queue");
         }
-        queue.close();
-        let mut got = Vec::new();
-        for _ in 0..160 {
-            got.push(rx.recv().unwrap());
-        }
-        pool.join();
-        assert_eq!(got.len(), 160);
-        assert!(got.iter().all(|r| r.state == TaskState::Done));
-        assert!(got.iter().all(|r| r.scores.len() == 8));
-        let mut uids: Vec<u64> = got.iter().map(|r| r.uid).collect();
-        uids.sort_unstable();
-        assert_eq!(uids, (0..160).collect::<Vec<u64>>());
-        let (pushed, pulled) = queue.counts();
-        assert_eq!(pushed, pulled, "refill loops must drain the queue");
     }
 
     #[test]
     fn push_policies_complete_all_tasks() {
         for policy in [Policy::RoundRobin, Policy::LeastLoaded] {
-            let queue = Arc::new(BulkQueue::new(4));
+            let queue = Arc::new(TaskQueue::new(QueueImpl::Ring, 4));
             let (tx, rx) = channel();
             let cfg = pool_cfg(3, 1, 0.0, policy);
             let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
@@ -619,7 +946,7 @@ mod tests {
                 queue.push_bulk(bulk).unwrap();
             }
             queue.close();
-            let mut uids: Vec<u64> = (0..96).map(|_| rx.recv().unwrap().uid).collect();
+            let mut uids: Vec<u64> = recv_n(&rx, 96).iter().map(|r| r.uid).collect();
             pool.join();
             uids.sort_unstable();
             assert_eq!(uids, (0..96).collect::<Vec<u64>>(), "policy {policy}");
@@ -628,7 +955,7 @@ mod tests {
 
     #[test]
     fn executable_task_runs_real_process() {
-        let queue = Arc::new(BulkQueue::new(2));
+        let queue = Arc::new(TaskQueue::new(QueueImpl::Ring, 2));
         let (tx, rx) = channel();
         let cfg = pool_cfg(1, 1, 0.0, Policy::PullBased);
         let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
@@ -649,8 +976,7 @@ mod tests {
         queue.push_bulk(vec![ok, bad]).unwrap();
         queue.close();
         let mut by_uid = std::collections::HashMap::new();
-        for _ in 0..2 {
-            let r = rx.recv().unwrap();
+        for r in recv_n(&rx, 2) {
             by_uid.insert(r.uid, r.state);
         }
         pool.join();
@@ -660,7 +986,7 @@ mod tests {
 
     #[test]
     fn cancel_drains_as_canceled() {
-        let queue = Arc::new(BulkQueue::new(64));
+        let queue = Arc::new(TaskQueue::new(QueueImpl::Ring, 64));
         let (tx, rx) = channel();
         let cfg = pool_cfg(1, 1, 1.0, Policy::PullBased);
         let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
@@ -680,8 +1006,8 @@ mod tests {
         pool.cancel();
         let mut done = 0;
         let mut canceled = 0;
-        for _ in 0..50 {
-            match rx.recv().unwrap().state {
+        for r in recv_n(&rx, 50) {
+            match r.state {
                 TaskState::Canceled => canceled += 1,
                 _ => done += 1,
             }
@@ -699,8 +1025,10 @@ mod tests {
         // One 64-task bulk whose first task sleeps: with task-granular
         // buffers the second executor slot chews through the 63 instant
         // siblings while the first sleeps.  (The seed's serial-bulk
-        // executor made the siblings wait the full sleep.)
-        let queue = Arc::new(BulkQueue::new(4));
+        // executor made the siblings wait the full sleep.)  Timestamps
+        // are recorded at execution time, so result batching cannot mask
+        // a head-of-line stall here.
+        let queue = Arc::new(TaskQueue::new(QueueImpl::Ring, 4));
         let (tx, rx) = channel();
         let cfg = pool_cfg(1, 2, 1.0, Policy::PullBased);
         let pool = WorkerPool::spawn(&cfg, queue.clone(), tx, Instant::now());
@@ -716,7 +1044,7 @@ mod tests {
         }
         queue.push_bulk(bulk).unwrap();
         queue.close();
-        let mut results: Vec<TaskResult> = (0..64).map(|_| rx.recv().unwrap()).collect();
+        let mut results = recv_n(&rx, 64);
         pool.join();
         results.sort_by_key(|r| r.uid);
         let long_finish = results[0].finished;

@@ -8,7 +8,7 @@
 //!   info                                       platform + artifact status
 
 use raptor::campaign::{self, figures, table};
-use raptor::coordinator::{Coordinator, EngineKind, Policy, RaptorConfig};
+use raptor::coordinator::{Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig};
 use raptor::metrics::{print_comparison, Table1Row};
 use raptor::pilot::GlobalSchedulerModel;
 use raptor::util::cli::Args;
@@ -16,7 +16,7 @@ use raptor::workload::{DockTimeModel, LigandLibrary};
 
 const VALUE_KEYS: &[&str] = &[
     "id", "scale", "out", "tasks", "workers", "slots", "seed", "bundle", "executors", "policy",
-    "bulk",
+    "bulk", "queue",
 ];
 
 fn main() {
@@ -48,7 +48,7 @@ USAGE:
   raptor exp --id N [--scale S] [--out DIR]   simulate paper experiment N (1..4)
   raptor table1 [--scale S] [--out DIR]       regenerate all Table-I rows
   raptor dock [--tasks N] [--workers W] [--executors E]
-              [--policy pull|rr|least] [--bulk B]
+              [--policy pull|rr|least] [--bulk B] [--queue ring|condvar]
                                               real docking via PJRT workers
   raptor baseline [--tasks N] [--slots S]     baselines: RP-only, static, pull
   raptor info                                 platform presets + artifacts";
@@ -127,9 +127,10 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
     let bundle: u32 = args.get_parse("bundle", 8)?;
     let bulk: usize = args.get_parse("bulk", 64)?;
     let policy = Policy::parse(args.get("policy").unwrap_or("pull"))?;
+    let queue_impl = QueueImpl::parse(args.get("queue").unwrap_or("ring"))?;
     let lib = LigandLibrary::tiny(n_tasks * bundle as u64);
     println!(
-        "real-mode docking: {n_tasks} calls x {bundle} ligands on {workers} workers x {executors} executors ({policy} dispatch, bulk {bulk})"
+        "real-mode docking: {n_tasks} calls x {bundle} ligands on {workers} workers x {executors} executors ({policy} dispatch, bulk {bulk}, {queue_impl} queue)"
     );
     let cfg = RaptorConfig {
         n_workers: workers,
@@ -137,6 +138,7 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
         engine: EngineKind::PjrtCpu,
         bulk_size: bulk,
         dispatch: policy,
+        queue_impl,
         ..Default::default()
     };
     let mut c = Coordinator::new(cfg)?;

@@ -7,7 +7,7 @@ pub mod stream;
 pub mod timeline;
 pub mod utilization;
 
-pub use report::{print_comparison, Table1Row};
+pub use report::{print_comparison, BenchReport, Table1Row};
 pub use stream::{StreamMetrics, TaskClass};
 pub use timeline::Timeline;
 pub use utilization::{utilization, Utilization};

@@ -1,7 +1,9 @@
 //! Experiment reports: Table-I rows, figure CSVs, paper-vs-measured
-//! comparison printing.
+//! comparison printing, and the machine-readable benchmark snapshots
+//! (`BENCH_*.json`) that record the perf trajectory.
 
 use std::path::Path;
+use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::util::json::{arr_f64, obj, Json};
 use crate::util::stats::{Histogram, Series};
@@ -216,6 +218,71 @@ pub fn figure_json(name: &str, xs: &[f64], ys: &[f64]) -> Json {
     ])
 }
 
+/// Machine-readable benchmark snapshot (`BENCH_queue.json`,
+/// `BENCH_scheduler.json`): bench name, run date, and one entry per
+/// measured configuration.  Both bench binaries serialize through this
+/// one writer so the perf-trajectory files stay schema-compatible as
+/// benches evolve.
+pub struct BenchReport {
+    name: String,
+    entries: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one measurement: a config description (free-form key/value
+    /// pairs, e.g. impl/producers/consumers/bulk) and its throughput.
+    pub fn push(&mut self, config: Vec<(&str, Json)>, tasks_per_s: f64) {
+        self.entries.push(obj(vec![
+            ("config", obj(config)),
+            ("tasks_per_s", Json::Num(tasks_per_s)),
+        ]));
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("date", Json::Str(utc_date())),
+            ("entries", Json::Arr(self.entries.clone())),
+        ])
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        write_json(path, &self.to_json())
+    }
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (no chrono in this environment; the
+/// civil-calendar conversion is the standard days-from-epoch algorithm).
+pub fn utc_date() -> String {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-1970-01-01 to (year, month, day), proleptic Gregorian.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +310,39 @@ mod tests {
         let j = r.to_json();
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.num_field("rate_max_mh").unwrap(), 17.4);
+    }
+
+    #[test]
+    fn civil_date_golden_values() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(11_017), (2000, 3, 1)); // across a leap day
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+        let today = utc_date();
+        assert_eq!(today.len(), 10);
+        assert_eq!(today.as_bytes()[4], b'-');
+        assert_eq!(today.as_bytes()[7], b'-');
+    }
+
+    #[test]
+    fn bench_report_schema() {
+        let mut rep = BenchReport::new("bench_queue");
+        rep.push(
+            vec![
+                ("impl", Json::Str("ring".into())),
+                ("producers", Json::Num(4.0)),
+            ],
+            1.25e6,
+        );
+        let parsed = crate::util::json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("bench_queue"));
+        assert_eq!(parsed.get("date").unwrap().as_str().unwrap().len(), 10);
+        let entries = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].num_field("tasks_per_s").unwrap(), 1.25e6);
+        assert_eq!(
+            entries[0].get("config").unwrap().get("impl").unwrap().as_str(),
+            Some("ring")
+        );
     }
 
     #[test]

@@ -40,6 +40,13 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse from the process environment (argv without argv[0]).  Used
+    /// by the bench binaries (`harness = false`), which receive their
+    /// arguments after cargo's `--` separator.
+    pub fn from_env(value_keys: &[&str]) -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1), value_keys)
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

@@ -5,7 +5,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use raptor::coordinator::{Coordinator, EngineKind, Policy, RaptorConfig};
+use raptor::coordinator::{Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig};
 use raptor::runtime::{artifacts_built, DockEngine};
 use raptor::task::{DockCall, ExecCall, TaskDesc, TaskState};
 use raptor::workload::{calls_to_tasks, LigandLibrary};
@@ -234,46 +234,61 @@ fn gpu_bundle_engine_roundtrip() {
     }
 }
 
-/// Every live dispatch policy moves a mixed workload end to end with
-/// exact accounting and a fully drained coordinator queue.
+/// Every live dispatch policy moves a mixed workload end to end, under
+/// BOTH queue implementations, with exact accounting and a fully drained
+/// coordinator queue.
 #[test]
 fn dispatch_policies_complete_end_to_end() {
-    for policy in [Policy::PullBased, Policy::RoundRobin, Policy::LeastLoaded] {
-        let cfg = RaptorConfig {
-            n_workers: 3,
-            executors_per_worker: 2,
-            bulk_size: 16,
-            engine: EngineKind::Synthetic,
-            exec_time_scale: 0.0,
-            dispatch: policy,
-            keep_results: true,
-            ..Default::default()
-        };
-        let mut c = Coordinator::new(cfg).unwrap();
-        let n = 300u64;
-        c.submit((0..n).map(|i| {
-            if i % 5 == 0 {
-                TaskDesc::executable(
-                    i,
-                    ExecCall {
-                        command: vec!["/bin/sh".into(), "-c".into(), ":".into()],
-                        sim_duration: 0.0,
-                    },
-                )
-            } else {
-                dock_task(i)
-            }
-        }))
-        .unwrap();
-        c.start().unwrap();
-        let report = c.join().unwrap();
-        assert_eq!(report.done, n, "policy {policy}");
-        assert_eq!(report.failed + report.canceled, 0, "policy {policy}");
-        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
-        uids.sort_unstable();
-        assert_eq!(uids, (0..n).collect::<Vec<u64>>(), "policy {policy}");
-        let (pushed, pulled) = c.queue_counts();
-        assert_eq!(pushed, pulled, "policy {policy}: queue not drained");
+    for queue_impl in [QueueImpl::Condvar, QueueImpl::Ring] {
+        for policy in [Policy::PullBased, Policy::RoundRobin, Policy::LeastLoaded] {
+            let cfg = RaptorConfig {
+                n_workers: 3,
+                executors_per_worker: 2,
+                bulk_size: 16,
+                engine: EngineKind::Synthetic,
+                exec_time_scale: 0.0,
+                dispatch: policy,
+                queue_impl,
+                keep_results: true,
+                ..Default::default()
+            };
+            let mut c = Coordinator::new(cfg).unwrap();
+            let n = 300u64;
+            c.submit((0..n).map(|i| {
+                if i % 5 == 0 {
+                    TaskDesc::executable(
+                        i,
+                        ExecCall {
+                            command: vec!["/bin/sh".into(), "-c".into(), ":".into()],
+                            sim_duration: 0.0,
+                        },
+                    )
+                } else {
+                    dock_task(i)
+                }
+            }))
+            .unwrap();
+            c.start().unwrap();
+            let report = c.join().unwrap();
+            assert_eq!(report.done, n, "policy {policy} / queue {queue_impl}");
+            assert_eq!(
+                report.failed + report.canceled,
+                0,
+                "policy {policy} / queue {queue_impl}"
+            );
+            let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+            uids.sort_unstable();
+            assert_eq!(
+                uids,
+                (0..n).collect::<Vec<u64>>(),
+                "policy {policy} / queue {queue_impl}"
+            );
+            let (pushed, pulled) = c.queue_counts();
+            assert_eq!(
+                pushed, pulled,
+                "policy {policy} / queue {queue_impl}: queue not drained"
+            );
+        }
     }
 }
 

@@ -8,7 +8,9 @@ use std::collections::HashSet;
 use std::sync::Arc;
 
 use common::prop;
-use raptor::coordinator::{BulkQueue, Coordinator, EngineKind, Partition, Policy, RaptorConfig};
+use raptor::coordinator::{
+    Coordinator, EngineKind, Partition, Policy, QueueImpl, RaptorConfig, TaskQueue,
+};
 use raptor::metrics::{StreamMetrics, TaskClass};
 use raptor::platform::{BatchSim, QueuePolicy, WaitShape};
 use raptor::sim::Engine;
@@ -56,8 +58,9 @@ fn prop_stride_partition() {
     });
 }
 
-/// Queue conservation under random concurrent producers/consumers: every
-/// pushed item is pulled exactly once.
+/// Queue conservation under random concurrent producers/consumers, over
+/// BOTH queue implementations: every pushed item is pulled exactly once,
+/// and the internal counters agree (`pushed == pulled`) after drain.
 #[test]
 fn prop_queue_no_loss_no_dup() {
     prop(12, 3, |rng| {
@@ -66,42 +69,50 @@ fn prop_queue_no_loss_no_dup() {
         let per = 200 + rng.next_below(800);
         let bulk = 1 + rng.next_below(64) as usize;
         let cap = 1 + rng.next_below(16) as usize;
-        let q = Arc::new(BulkQueue::new(cap));
-        let ph: Vec<_> = (0..producers)
-            .map(|p| {
-                let q = q.clone();
-                std::thread::spawn(move || {
-                    let mut next = (p as u64) << 32;
-                    let mut sent = 0;
-                    while sent < per {
-                        let n = bulk.min((per - sent) as usize);
-                        q.push_bulk((next..next + n as u64).collect()).unwrap();
-                        next += n as u64;
-                        sent += n as u64;
-                    }
+        for which in [QueueImpl::Condvar, QueueImpl::Ring] {
+            let q: Arc<TaskQueue<u64>> = Arc::new(TaskQueue::new(which, cap));
+            let ph: Vec<_> = (0..producers)
+                .map(|p| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let mut next = (p as u64) << 32;
+                        let mut sent = 0;
+                        while sent < per {
+                            let n = bulk.min((per - sent) as usize);
+                            q.push_bulk((next..next + n as u64).collect()).unwrap();
+                            next += n as u64;
+                            sent += n as u64;
+                        }
+                    })
                 })
-            })
-            .collect();
-        let ch: Vec<_> = (0..consumers)
-            .map(|_| {
-                let q = q.clone();
-                std::thread::spawn(move || {
-                    let mut got = Vec::new();
-                    while let Some(b) = q.pull_bulk() {
-                        got.extend(b);
-                    }
-                    got
+                .collect();
+            let ch: Vec<_> = (0..consumers)
+                .map(|_| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let mut got = Vec::new();
+                        while let Some(b) = q.pull_bulk() {
+                            got.extend(b);
+                        }
+                        got
+                    })
                 })
-            })
-            .collect();
-        for h in ph {
-            h.join().unwrap();
+                .collect();
+            for h in ph {
+                h.join().unwrap();
+            }
+            q.close();
+            let mut all: Vec<u64> = ch.into_iter().flat_map(|c| c.join().unwrap()).collect();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(
+                all.len() as u64,
+                producers as u64 * per,
+                "{which}: lost or duplicated items"
+            );
+            let (pushed, pulled) = q.counts();
+            assert_eq!(pushed, pulled, "{which}: counter mismatch after drain");
         }
-        q.close();
-        let mut all: Vec<u64> = ch.into_iter().flat_map(|c| c.join().unwrap()).collect();
-        all.sort_unstable();
-        all.dedup();
-        assert_eq!(all.len() as u64, producers as u64 * per, "lost or duplicated items");
     });
 }
 
@@ -151,11 +162,17 @@ fn prop_task_conservation_under_interleavings() {
             1 => Policy::RoundRobin,
             _ => Policy::LeastLoaded,
         };
+        let queue_impl = if rng.next_below(2) == 0 {
+            QueueImpl::Condvar
+        } else {
+            QueueImpl::Ring
+        };
         let cfg = RaptorConfig {
             n_workers: 1 + rng.next_below(3) as u32,
             executors_per_worker: 1 + rng.next_below(3) as u32,
             bulk_size: 1 + rng.next_below(16) as usize,
             queue_capacity: 1 + rng.next_below(8) as usize,
+            queue_impl,
             dispatch,
             engine: EngineKind::Synthetic,
             exec_time_scale: 1.0,
@@ -190,7 +207,7 @@ fn prop_task_conservation_under_interleavings() {
         assert_eq!(
             report.done + report.failed + report.canceled,
             total,
-            "conservation violated (stop={do_stop}, policy={dispatch})"
+            "conservation violated (stop={do_stop}, policy={dispatch}, queue={queue_impl})"
         );
         let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
         uids.sort_unstable();
