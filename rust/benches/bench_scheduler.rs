@@ -12,11 +12,22 @@
 //!    the seed's serial-bulk executor (re-created here as a baseline)
 //!    vs worker-local task buffers under pull / round-robin /
 //!    least-loaded dispatch, with pull also compared across queue impls;
-//! 3. modeled RP-only vs RAPTOR-pull makespans across task durations —
+//! 3. multi-coordinator sharding sweep (`--coordinators 1,2,4,8`):
+//!    tasks/s as shards (and their worker slices) scale, on the mixed
+//!    long-tail workload — the §IV "many concurrent coordinators" story
+//!    (experiment 3 runs 8 over 8336 nodes);
+//! 4. work-stealing ablation on a pathologically skewed 2-shard
+//!    workload (every bulk strided to shard 0 is a sleeper bulk):
+//!    steal on vs off, with steal counters recorded;
+//! 5. modeled RP-only vs RAPTOR-pull makespans across task durations —
 //!    reproduces "performance degrades for short running tasks on large
 //!    resources" with the crossover thresholds;
-//! 4. dispatch-policy ablation (pull vs static) under the modeled
+//! 6. dispatch-policy ablation (pull vs static) under the modeled
 //!    long-tail workload.
+//!
+//! Every measured real-mode run asserts cross-shard task conservation
+//! (`done + failed + canceled == submitted`, per-shard queue
+//! `pushed == pulled`) before its rate is recorded.
 //!
 //! Real-mode rates are recorded machine-readably via
 //! `metrics::BenchReport` (the perf trajectory file).
@@ -26,7 +37,9 @@ use std::time::Instant;
 
 use raptor::baseline;
 use raptor::coordinator::worker::synthetic_scores;
-use raptor::coordinator::{BulkQueue, Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig};
+use raptor::coordinator::{
+    BulkQueue, Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig, RunReport,
+};
 use raptor::metrics::BenchReport;
 use raptor::pilot::GlobalSchedulerModel;
 use raptor::task::{DockCall, ExecCall, TaskDesc, TaskKind};
@@ -121,6 +134,90 @@ fn real_mode_policy(policy: Policy, queue_impl: QueueImpl, tasks: Vec<TaskDesc>)
     (n as f64 / t0.elapsed().as_secs_f64(), report.utilization.avg)
 }
 
+/// Cross-shard conservation: every submitted task reached exactly one
+/// terminal state, every shard queue drained what it accepted, and the
+/// steal totals agree with the per-shard counters.  Asserted on every
+/// measured sharded run before its rate is recorded.
+fn assert_conservation(report: &RunReport, submitted: u64) {
+    assert_eq!(
+        report.done + report.failed + report.canceled,
+        submitted,
+        "task conservation violated"
+    );
+    let shard_done: u64 = report.shards.iter().map(|s| s.done).sum();
+    assert_eq!(shard_done, report.done, "per-shard done breakdown drifted");
+    for s in &report.shards {
+        assert_eq!(
+            s.queue_pushed, s.queue_pulled,
+            "shard {} queue did not drain what it accepted",
+            s.shard
+        );
+    }
+    let steal_tasks: u64 = report.shards.iter().map(|s| s.steal_tasks).sum();
+    assert_eq!(steal_tasks, report.steal_tasks, "steal totals drifted");
+}
+
+/// Run the sharded coordinator on `tasks` and assert conservation.
+/// Returns (tasks/s, report).
+fn sharded_run(
+    coordinators: u32,
+    workers: u32,
+    steal: bool,
+    tasks: Vec<TaskDesc>,
+) -> (f64, RunReport) {
+    let n = tasks.len() as u64;
+    let cfg = RaptorConfig {
+        n_workers: workers,
+        executors_per_worker: SWEEP_EXECUTORS,
+        bulk_size: SWEEP_BULK,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 1.0,
+        n_coordinators: coordinators,
+        steal,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    c.submit(tasks).unwrap();
+    let t0 = Instant::now();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    let rate = n as f64 / t0.elapsed().as_secs_f64();
+    assert_conservation(&report, n);
+    assert_eq!(report.done, n);
+    (rate, report)
+}
+
+/// Pathologically skewed workload for the steal ablation: every bulk the
+/// feeder will stride to shard 0 (strict round-robin over `shards`) is
+/// made of sleepers, every other bulk of instant docking calls — shard
+/// 0's queue backs up while its siblings run dry, so only stealing keeps
+/// the sibling slots busy.
+fn skewed_tasks(n: u64, shards: u64, bulk: u64, sleep_s: f64) -> Vec<TaskDesc> {
+    (0..n)
+        .map(|i| {
+            if (i / bulk) % shards == 0 {
+                TaskDesc::executable(
+                    i,
+                    ExecCall {
+                        command: vec![],
+                        sim_duration: sleep_s,
+                    },
+                )
+            } else {
+                TaskDesc::function(
+                    i,
+                    DockCall {
+                        library_seed: 1,
+                        protein_seed: 2,
+                        first_ligand_id: i * 8,
+                        bundle: 8,
+                    },
+                )
+            }
+        })
+        .collect()
+}
+
 /// Re-creation of the SEED executor: each slot pulls a whole bulk from
 /// the shared queue and runs it serially, so a long-tailed task blocks
 /// its queued bulk-siblings while other slots starve.  Deliberately kept
@@ -177,7 +274,7 @@ fn serial_bulk_baseline(tasks: Vec<TaskDesc>) -> (f64, f64) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["out"])?;
+    let args = Args::from_env(&["out", "coordinators"])?;
     let smoke = args.flag("smoke");
     let out = args.get("out").unwrap_or("BENCH_scheduler.json").to_string();
     let mut report = BenchReport::new(if smoke {
@@ -260,6 +357,70 @@ fn main() -> anyhow::Result<()> {
             format!("worker buffers / {policy} / {which}"),
             rate,
             util * 100.0
+        );
+    }
+
+    let default_sweep: &[u32] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let sweep: Vec<u32> = args.get_list_parse("coordinators", default_sweep)?;
+    println!(
+        "\n== coordinator sharding sweep (mixed long-tail, {mixed_tasks} tasks/shard, 2 workers x {SWEEP_EXECUTORS} executors per shard) =="
+    );
+    for &n_c in &sweep {
+        let workers = 2 * n_c;
+        let n = mixed_tasks * n_c as u64;
+        let (rate, r) = sharded_run(n_c, workers, true, mixed_longtail_tasks(n, 7));
+        report.push_entry(
+            vec![
+                ("bench", Json::Str("coordinator_sweep".into())),
+                ("coordinators", Json::Num(n_c as f64)),
+                ("workers", Json::Num(workers as f64)),
+                ("executors", Json::Num(SWEEP_EXECUTORS as f64)),
+                ("bulk", Json::Num(SWEEP_BULK as f64)),
+                ("tasks", Json::Num(n as f64)),
+            ],
+            rate,
+            vec![
+                ("steal_bulks", Json::Num(r.steal_bulks as f64)),
+                ("steal_tasks", Json::Num(r.steal_tasks as f64)),
+            ],
+        );
+        println!(
+            "  {n_c} coordinator(s) x {workers:>2} workers: {rate:>8.0} tasks/s   steals {} bulks / {} tasks",
+            r.steal_bulks, r.steal_tasks
+        );
+    }
+
+    println!("\n== work-stealing ablation (skewed 2-shard workload: shard 0's stride is all sleepers) ==");
+    let skew_n: u64 = if smoke { 512 } else { 2_048 };
+    for steal in [true, false] {
+        let (rate, r) = sharded_run(2, 2, steal, skewed_tasks(skew_n, 2, SWEEP_BULK as u64, 0.002));
+        if steal {
+            assert!(
+                r.steal_bulks > 0,
+                "skewed workload with stealing on must observe steals"
+            );
+        } else {
+            assert_eq!(r.steal_bulks, 0, "steal-off run must not steal");
+        }
+        report.push_entry(
+            vec![
+                ("bench", Json::Str("steal_ablation".into())),
+                ("coordinators", Json::Num(2.0)),
+                ("steal", Json::Bool(steal)),
+                ("tasks", Json::Num(skew_n as f64)),
+                ("bulk", Json::Num(SWEEP_BULK as f64)),
+            ],
+            rate,
+            vec![
+                ("steal_bulks", Json::Num(r.steal_bulks as f64)),
+                ("steal_tasks", Json::Num(r.steal_tasks as f64)),
+            ],
+        );
+        println!(
+            "  steal {:<3}: {rate:>8.0} tasks/s   steals {} bulks / {} tasks",
+            if steal { "on" } else { "off" },
+            r.steal_bulks,
+            r.steal_tasks
         );
     }
 

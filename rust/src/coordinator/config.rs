@@ -3,6 +3,7 @@
 //! bulk size) plus reproduction-specific execution options.
 
 use super::dispatch::{Policy, DEFAULT_BULK};
+use super::partition::Partition;
 use super::queue::QueueImpl;
 
 /// What a worker's executor slots run for *function* tasks.
@@ -24,6 +25,15 @@ pub enum EngineKind {
 pub struct RaptorConfig {
     /// Worker count (paper: one worker per node).
     pub n_workers: u32,
+    /// Coordinator shards (§III design choice 3, experiment 3: 8
+    /// coordinators over 8336 nodes).  Workers are partitioned evenly
+    /// across shards via [`Partition::split`]; each shard owns its own
+    /// bounded queue, `--coordinators N` on the CLI.
+    pub n_coordinators: u32,
+    /// Work stealing between shards: a worker whose home shard's queue is
+    /// empty raids the most-loaded sibling shard instead of idling
+    /// (`--no-steal` disables, for ablation).
+    pub steal: bool,
     /// Executor slots per worker (paper: cores-per-node, `cpn`).
     pub executors_per_worker: u32,
     /// Tasks per bulk (paper default 128).
@@ -63,6 +73,8 @@ impl Default for RaptorConfig {
     fn default() -> Self {
         Self {
             n_workers: 2,
+            n_coordinators: 1,
+            steal: true,
             executors_per_worker: 2,
             bulk_size: DEFAULT_BULK,
             queue_capacity: 8,
@@ -90,8 +102,23 @@ impl RaptorConfig {
         (2 * self.bulk_size).max(2 * self.executors_per_worker as usize)
     }
 
+    /// How workers split across coordinator shards.  Shard-major and
+    /// deterministic: shard 0 gets workers `0..workers[0]`, shard 1 the
+    /// next slice, and so on (see [`Partition::worker_base`]).
+    pub fn partition(&self) -> Partition {
+        Partition::split(self.n_workers, self.n_coordinators, 0)
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.n_workers > 0, "need at least one worker");
+        anyhow::ensure!(self.n_coordinators > 0, "need at least one coordinator");
+        anyhow::ensure!(
+            self.n_workers >= self.n_coordinators,
+            "every coordinator shard needs at least one worker to drain its queue \
+             ({} workers < {} coordinators)",
+            self.n_workers,
+            self.n_coordinators
+        );
         anyhow::ensure!(self.executors_per_worker > 0, "need executor slots");
         anyhow::ensure!(self.bulk_size > 0, "bulk size must be positive");
         anyhow::ensure!(self.queue_capacity > 0, "queue capacity must be positive");
@@ -139,6 +166,30 @@ mod tests {
             ..Default::default()
         };
         assert!(c.validate().is_err(), "static dispatch is sim-only");
+    }
+
+    #[test]
+    fn sharding_validation() {
+        let c = RaptorConfig {
+            n_coordinators: 0,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        let c = RaptorConfig {
+            n_workers: 2,
+            n_coordinators: 3,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err(), "a shard with zero workers never drains");
+        let c = RaptorConfig {
+            n_workers: 8,
+            n_coordinators: 3,
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        let p = c.partition();
+        assert_eq!(p.total_workers(), 8);
+        assert_eq!(p.n_coordinators(), 3);
     }
 
     #[test]

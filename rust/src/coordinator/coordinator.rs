@@ -1,34 +1,25 @@
 //! The RAPTOR coordinator (real mode): the paper's
 //! `rp.raptor.coordinator` API — `submit`, `start`, `join`, `stop` — over
-//! a bounded bulk queue and a worker pool.
+//! bounded bulk queues and worker pools.
 //!
 //! Tasks are submitted (before or after `start`), batched into bulks of
-//! `bulk_size` (§III design choice 5), pushed through the bounded queue
-//! (backpressure), pulled by executor slots, and their results come back
-//! as *result-bulks* (executor slots batch up to `RESULT_BATCH` results
-//! per channel send) collected by `join`, which also drives the user
-//! callback.
+//! `bulk_size` (§III design choice 5), strided across the configured
+//! coordinator shards (`RaptorConfig::n_coordinators`; one shard by
+//! default), pulled by executor slots — with cross-shard work stealing
+//! when a shard runs dry — and their results come back as *result-bulks*
+//! (executor slots batch up to `RESULT_BATCH` results per channel send)
+//! collected by `join`, which also drives the user callback.
+//!
+//! [`Coordinator`] is a thin facade over
+//! [`super::sharded::ShardedCoordinator`], which owns the shard
+//! machinery; with `n_coordinators == 1` the pipeline is exactly the
+//! pre-sharding single-queue hot path (no steal probes, blocking pulls).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
-
-use crate::metrics::{utilization, Timeline, Utilization};
-use crate::task::{TaskDesc, TaskResult, TaskState, NO_WORKER};
+use crate::metrics::{Timeline, Utilization};
+use crate::task::{TaskDesc, TaskResult};
 
 use super::config::RaptorConfig;
-use super::queue::{TaskQueue, TryPushError};
-use super::worker::WorkerPool;
-
-/// Retry-flush backoff bounds: after a `TryPushError::Full`, the next
-/// flush attempt waits `RETRY_BACKOFF_MIN`, doubling per consecutive
-/// failure up to `RETRY_BACKOFF_MAX`.  Without this the collector
-/// busy-spins flush attempts against a saturated queue — each failed
-/// `try_push_bulk` is pure contention on the very queue the workers are
-/// trying to drain.
-const RETRY_BACKOFF_MIN: Duration = Duration::from_micros(500);
-const RETRY_BACKOFF_MAX: Duration = Duration::from_millis(50);
+use super::sharded::{ShardReport, ShardedCoordinator};
 
 /// Result-callback type (the paper's status callbacks).
 pub type ResultCallback = Box<dyn FnMut(&TaskResult) + Send>;
@@ -50,356 +41,72 @@ pub struct RunReport {
     pub utilization: Utilization,
     /// Completed-task throughput (tasks/s over the whole run).
     pub rate_per_s: f64,
-    /// Times the retry flush found the queue full and backed off
+    /// Times the retry flush found every open queue full and backed off
     /// (observability for the failure-management path under saturation).
     pub retry_flush_stalls: u64,
+    /// Bulks workers pulled from *sibling* shards' queues (summed over
+    /// shards; 0 in single-coordinator or `steal: false` runs).
+    pub steal_bulks: u64,
+    /// Tasks inside those stolen bulks.
+    pub steal_tasks: u64,
+    /// Per-shard breakdown (one entry per coordinator shard).
+    pub shards: Vec<ShardReport>,
     /// Retained results (when `cfg.keep_results`).
     pub results: Vec<TaskResult>,
 }
 
-/// Coordinator states.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Phase {
-    Created,
-    Started,
-    Finished,
-}
-
-/// The real-mode RAPTOR coordinator.
+/// The real-mode RAPTOR coordinator (facade; see module docs).
 pub struct Coordinator {
-    cfg: RaptorConfig,
-    submit_tx: Option<Sender<TaskDesc>>,
-    submit_rx: Option<Receiver<TaskDesc>>,
-    submitted: Arc<AtomicU64>,
-    queue: Arc<TaskQueue<TaskDesc>>,
-    results_rx: Option<Receiver<Vec<TaskResult>>>,
-    results_tx: Option<Sender<Vec<TaskResult>>>,
-    pool: Option<WorkerPool>,
-    feeder: Option<std::thread::JoinHandle<()>>,
-    callback: Option<ResultCallback>,
-    phase: Phase,
-    t0: Instant,
+    inner: ShardedCoordinator,
 }
 
 impl Coordinator {
     pub fn new(cfg: RaptorConfig) -> anyhow::Result<Self> {
-        cfg.validate()?;
-        let (submit_tx, submit_rx) = channel();
-        let (results_tx, results_rx) = channel();
-        let queue = Arc::new(TaskQueue::new(cfg.queue_impl, cfg.queue_capacity));
         Ok(Self {
-            cfg,
-            submit_tx: Some(submit_tx),
-            submit_rx: Some(submit_rx),
-            submitted: Arc::new(AtomicU64::new(0)),
-            queue,
-            results_rx: Some(results_rx),
-            results_tx: Some(results_tx),
-            pool: None,
-            feeder: None,
-            callback: None,
-            phase: Phase::Created,
-            t0: Instant::now(),
+            inner: ShardedCoordinator::new(cfg)?,
         })
     }
 
     /// Register a per-result callback (must precede `join`).
     pub fn on_result(&mut self, cb: ResultCallback) {
-        self.callback = Some(cb);
+        self.inner.on_result(cb);
     }
 
     /// Submit tasks (allowed before and after `start`, until `join`).
     pub fn submit(&mut self, tasks: impl IntoIterator<Item = TaskDesc>) -> anyhow::Result<u64> {
-        let tx = self
-            .submit_tx
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("coordinator already joined"))?;
-        let mut n = 0;
-        for t in tasks {
-            tx.send(t).map_err(|_| anyhow::anyhow!("feeder gone"))?;
-            n += 1;
-        }
-        self.submitted.fetch_add(n, Ordering::SeqCst);
-        Ok(n)
+        self.inner.submit(tasks)
     }
 
     /// Launch workers and the bulk feeder.
     pub fn start(&mut self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.phase == Phase::Created, "already started");
-        self.t0 = Instant::now();
-        let results_tx = self.results_tx.take().unwrap();
-        // The feeder holds its own result sender: tasks the closed queue
-        // refuses surface as Canceled instead of silently vanishing.
-        let feeder_tx = results_tx.clone();
-        self.pool = Some(WorkerPool::spawn(
-            &self.cfg,
-            self.queue.clone(),
-            results_tx,
-            self.t0,
-        ));
-        // Bulk feeder: drains the submission channel into bulks.  The
-        // queue stays open after drain: `join` may still push retries and
-        // closes it once every task has reached a terminal state.
-        //
-        // Conservation: once the queue refuses a push (closed by `stop`),
-        // the refused bulk AND every later-submitted task — including the
-        // final partial bulk — are reported Canceled through `feeder_tx`,
-        // so `submitted == done + failed + canceled` still balances and
-        // `join` converges by counting rather than by channel disconnect.
-        let rx = self.submit_rx.take().unwrap();
-        let queue = self.queue.clone();
-        let bulk_size = self.cfg.bulk_size;
-        let t0 = self.t0;
-        self.feeder = Some(std::thread::spawn(move || {
-            let mut bulk = Vec::with_capacity(bulk_size);
-            // Tasks the queue refused: terminal-Canceled, never dropped.
-            let mut dropped: Vec<TaskDesc> = Vec::new();
-            while let Ok(task) = rx.recv() {
-                if !dropped.is_empty() {
-                    dropped.push(task);
-                    continue;
-                }
-                bulk.push(task);
-                if bulk.len() >= bulk_size {
-                    if let Err(refused) = queue.push_bulk(std::mem::take(&mut bulk)) {
-                        dropped = refused;
-                    }
-                }
-            }
-            if dropped.is_empty() && !bulk.is_empty() {
-                if let Err(refused) = queue.push_bulk(std::mem::take(&mut bulk)) {
-                    dropped = refused;
-                }
-            }
-            if !dropped.is_empty() {
-                let now = t0.elapsed().as_secs_f64();
-                let canceled: Vec<TaskResult> = dropped
-                    .into_iter()
-                    .map(|task| TaskResult::canceled(task.uid, now, NO_WORKER))
-                    .collect();
-                let _ = feeder_tx.send(canceled);
-            }
-        }));
-        self.phase = Phase::Started;
-        Ok(())
+        self.inner.start()
     }
 
     /// Wait for every submitted task to reach a terminal state; tear the
     /// overlay down and report.
     ///
-    /// Conservation contract: `done + failed + canceled == submitted`.
-    /// Every submitted task produces exactly one terminal result — from an
-    /// executor, from the feeder (queue refused it after `stop`), or from
-    /// the retry bookkeeping below (retry impossible after `stop`).
+    /// Conservation contract: `done + failed + canceled == submitted`,
+    /// summed across shards and steals.
     pub fn join(&mut self) -> anyhow::Result<RunReport> {
-        anyhow::ensure!(self.phase == Phase::Started, "not started");
-        // No more submissions: dropping the sender lets the feeder drain.
-        drop(self.submit_tx.take());
-
-        /// Terminal-state accounting shared by the receive loop and the
-        /// abandoned-retry paths.
-        struct Acc {
-            received: u64,
-            done: u64,
-            failed: u64,
-            canceled: u64,
-            first_task: f64,
-            timeline: Timeline,
-            results: Vec<TaskResult>,
-            keep: bool,
-        }
-        impl Acc {
-            fn terminal(
-                &mut self,
-                r: TaskResult,
-                callback: &mut Option<ResultCallback>,
-            ) -> anyhow::Result<()> {
-                self.received += 1;
-                match r.state {
-                    TaskState::Done => self.done += 1,
-                    TaskState::Failed => self.failed += 1,
-                    TaskState::Canceled => self.canceled += 1,
-                    s => anyhow::bail!("non-terminal result state {s:?}"),
-                }
-                self.first_task = self.first_task.min(r.started);
-                self.timeline.record(r.started, r.finished, 1.0);
-                if let Some(cb) = callback {
-                    cb(&r);
-                }
-                if self.keep {
-                    self.results.push(r);
-                }
-                Ok(())
-            }
-        }
-
-        let rx = self.results_rx.take().unwrap();
-        let expected = || self.submitted.load(Ordering::SeqCst);
-        let mut acc = Acc {
-            received: 0,
-            done: 0,
-            failed: 0,
-            canceled: 0,
-            first_task: f64::INFINITY,
-            timeline: Timeline::new(),
-            results: Vec::new(),
-            keep: self.cfg.keep_results,
-        };
-        // Retry bookkeeping (failure-management policy): uid -> attempts.
-        let mut attempts: std::collections::HashMap<crate::task::TaskId, u32> =
-            std::collections::HashMap::new();
-        // Failed results awaiting resubmission, paired with the task to
-        // resubmit (cloned out of the failed result exactly once).
-        // Retries are flushed as ONE bulk with a non-blocking push: this
-        // thread is the result collector, and a blocking push against a
-        // full queue would stall the draining that makes the queue empty
-        // out — while also pushing one single-task bulk per failure
-        // through the bounded queue (the seed behavior) burns queue slots.
-        let mut retry_buf: Vec<(TaskResult, TaskDesc)> = Vec::new();
-        // Capped exponential backoff on retry flushes: `next_flush` gates
-        // the attempts, doubling the gap per consecutive `Full` up to
-        // RETRY_BACKOFF_MAX, resetting once a flush lands.
-        let mut backoff = RETRY_BACKOFF_MIN;
-        let mut next_flush = Instant::now();
-        let mut retry_flush_stalls: u64 = 0;
-        while acc.received < expected() {
-            if !retry_buf.is_empty() && Instant::now() >= next_flush {
-                let (results, tasks): (Vec<TaskResult>, Vec<TaskDesc>) =
-                    retry_buf.drain(..).unzip();
-                match self.queue.try_push_bulk(tasks) {
-                    Ok(()) => {
-                        backoff = RETRY_BACKOFF_MIN;
-                    }
-                    // Queue saturated: workers are pulling, so more results
-                    // (and another flush chance) are on the way.  The push
-                    // hands the bulk back; re-pair it and back off — an
-                    // immediate retry would just contend on the queue the
-                    // workers are draining.
-                    Err(TryPushError::Full(tasks)) => {
-                        retry_buf = results.into_iter().zip(tasks).collect();
-                        retry_flush_stalls += 1;
-                        next_flush = Instant::now() + backoff;
-                        backoff = (backoff * 2).min(RETRY_BACKOFF_MAX);
-                    }
-                    // Queue closed by `stop`: the retry can never run, so
-                    // the buffered failure is the terminal outcome.
-                    Err(TryPushError::Closed(_)) => {
-                        backoff = RETRY_BACKOFF_MIN;
-                        for r in results {
-                            acc.terminal(r, &mut self.callback)?;
-                        }
-                    }
-                }
-                if acc.received >= expected() {
-                    break;
-                }
-            }
-            // Receive the next result-bulk.  With retries pending, bound
-            // the wait by the flush deadline: a plain recv could park
-            // forever when the only outstanding tasks are the buffered
-            // retries themselves.
-            let bulk = if retry_buf.is_empty() {
-                match rx.recv() {
-                    Ok(b) => b,
-                    Err(_) => break, // all workers gone
-                }
-            } else {
-                let wait = next_flush.saturating_duration_since(Instant::now());
-                match rx.recv_timeout(wait) {
-                    Ok(b) => b,
-                    Err(RecvTimeoutError::Timeout) => continue, // flush due
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
-            };
-            for r in bulk {
-                // Failed task with retry budget left: buffer for
-                // resubmission instead of counting it as terminal.
-                let retryable = r.state == TaskState::Failed && r.failed_task.is_some();
-                if retryable && self.cfg.max_retries > 0 {
-                    let n = attempts.entry(r.uid).or_insert(0);
-                    if *n < self.cfg.max_retries {
-                        *n += 1;
-                        log::info!("retrying task {} (attempt {})", r.uid, *n + 1);
-                        let task = r
-                            .failed_task
-                            .as_deref()
-                            .cloned()
-                            .expect("retry result retains its task");
-                        retry_buf.push((r, task));
-                        continue; // not terminal yet
-                    }
-                }
-                acc.terminal(r, &mut self.callback)?;
-            }
-        }
-        // Disconnect fallback: if the channel died with retries still
-        // buffered, their stored failures are the terminal outcomes.
-        for (r, _) in retry_buf.drain(..) {
-            acc.terminal(r, &mut self.callback)?;
-        }
-        // Every task is terminal: release the workers.
-        self.queue.close();
-        if let Some(f) = self.feeder.take() {
-            let _ = f.join();
-        }
-        if let Some(p) = self.pool.take() {
-            p.join();
-        }
-        self.phase = Phase::Finished;
-        let wall_s = self.t0.elapsed().as_secs_f64();
-        let util = utilization(&acc.timeline, self.cfg.capacity() as f64, Some(wall_s));
-        let rate = if wall_s > 0.0 {
-            acc.done as f64 / wall_s
-        } else {
-            0.0
-        };
-        Ok(RunReport {
-            done: acc.done,
-            failed: acc.failed,
-            canceled: acc.canceled,
-            wall_s,
-            first_task_s: if acc.first_task.is_finite() {
-                acc.first_task
-            } else {
-                0.0
-            },
-            timeline: acc.timeline,
-            utilization: util,
-            rate_per_s: rate,
-            retry_flush_stalls,
-            results: acc.results,
-        })
+        self.inner.join()
     }
 
     /// Cancel outstanding work, then join.
     pub fn stop(&mut self) -> anyhow::Result<RunReport> {
-        anyhow::ensure!(self.phase == Phase::Started, "not started");
-        drop(self.submit_tx.take());
-        if let Some(p) = &self.pool {
-            p.cancel();
-        }
-        // After cancel, workers drain every queued bulk as Canceled, the
-        // feeder reports queue-refused tasks as Canceled, and buffered
-        // retries resolve to Failed, so join's accounting converges to
-        // exactly `submitted` terminal results.
-        self.join()
+        self.inner.stop()
     }
 
-    /// (tasks pushed, tasks pulled) on the coordinator bulk queue.  After
-    /// a completed `join`/`stop` the two are equal: the refill/dispatch
-    /// threads drain the queue even under cancellation.
+    /// (tasks pushed, tasks pulled) summed over the coordinator bulk
+    /// queues.  After a completed `join`/`stop` the two are equal: the
+    /// refill/dispatch threads (and thieves) drain every queue even under
+    /// cancellation.
     pub fn queue_counts(&self) -> (u64, u64) {
-        self.queue.counts()
+        self.inner.queue_counts()
     }
-}
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        if self.phase == Phase::Started {
-            if let Some(p) = &self.pool {
-                p.cancel();
-            }
-        }
+    /// Per-shard (pushed, pulled) queue counts.
+    pub fn shard_queue_counts(&self) -> Vec<(u64, u64)> {
+        self.inner.shard_queue_counts()
     }
 }
 
@@ -407,7 +114,9 @@ impl Drop for Coordinator {
 mod tests {
     use super::*;
     use crate::coordinator::config::EngineKind;
-    use crate::task::{DockCall, ExecCall};
+    use crate::task::{DockCall, ExecCall, TaskState};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
 
     fn fn_task(uid: u64) -> TaskDesc {
         TaskDesc::function(
@@ -466,6 +175,38 @@ mod tests {
         let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
         uids.sort_unstable();
         assert_eq!(uids, (0..500).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn single_coordinator_report_has_one_shard() {
+        let report = session(100);
+        assert_eq!(report.shards.len(), 1);
+        assert_eq!(report.shards[0].done, 100);
+        assert_eq!(report.steal_bulks, 0, "nothing to steal from");
+        assert_eq!(report.steal_tasks, 0);
+    }
+
+    #[test]
+    fn facade_runs_sharded_sessions() {
+        let cfg = RaptorConfig {
+            n_workers: 4,
+            n_coordinators: 4,
+            executors_per_worker: 1,
+            bulk_size: 8,
+            engine: EngineKind::Synthetic,
+            keep_results: true,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg).unwrap();
+        c.submit((0..320).map(fn_task)).unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 320);
+        assert_eq!(report.shards.len(), 4);
+        assert_eq!(c.shard_queue_counts().len(), 4);
+        let (pushed, pulled) = c.queue_counts();
+        assert_eq!(pushed, 320);
+        assert_eq!(pulled, 320);
     }
 
     #[test]

@@ -105,6 +105,19 @@ impl Dispatcher {
     }
 }
 
+/// Victim selection for work stealing: the most-loaded sibling shard
+/// with a non-empty backlog, ties broken to the lowest index (stable, so
+/// tests are deterministic).  `None` when every sibling is empty — the
+/// thief parks on its home queue instead of spinning over drained rings.
+pub fn pick_victim(backlogs: &[usize], home: usize) -> Option<usize> {
+    backlogs
+        .iter()
+        .enumerate()
+        .filter(|&(i, &b)| i != home && b > 0)
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+}
+
 /// Bulk-size selection.  Paper: "they started executing bulks of 128
 /// mixed function and executable tasks" — 128 is the production default;
 /// the ablation sweeps this.
@@ -174,6 +187,19 @@ mod tests {
         assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
         assert_eq!(Policy::parse("least").unwrap(), Policy::LeastLoaded);
         assert!(Policy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn victim_is_most_loaded_sibling() {
+        // Home shard excluded even when it is the most loaded.
+        assert_eq!(pick_victim(&[9, 3, 5], 0), Some(2));
+        assert_eq!(pick_victim(&[9, 3, 5], 1), Some(0));
+        // Ties break to the lowest index.
+        assert_eq!(pick_victim(&[4, 0, 4, 4], 0), Some(2));
+        assert_eq!(pick_victim(&[4, 4, 4], 2), Some(0));
+        // Empty siblings are never victims.
+        assert_eq!(pick_victim(&[0, 7, 0], 1), None);
+        assert_eq!(pick_victim(&[3], 0), None, "single shard: nothing to raid");
     }
 
     #[test]

@@ -1,25 +1,68 @@
 //! RAPTOR: the coordinator/worker task overlay (the paper's contribution).
 //!
-//! # Two-level dispatch architecture (real mode)
+//! # Sharded two-level dispatch architecture (real mode)
 //!
-//! Tasks move through two queues of different granularity:
+//! Real mode runs N coordinator *shards* (§III design choice 3;
+//! experiment 3 uses 8 coordinators over 8336 nodes), each owning a
+//! slice of the workers and its own bounded queue.  Within a shard,
+//! tasks move through two queues of different granularity:
 //!
 //! ```text
-//!  submit() ─▶ feeder ─▶ TaskQueue ──────▶ per-worker TaskBuffer ─▶ executor slots
-//!             (batches    (bounded,         (bulk segments,          (each owns its
-//!              into       bulk-granular,     atomic claim            PJRT engine;
-//!              bulks)      lock-free ring     cursors, lock-free      results leave in
-//!                          or condvar)        task claims)            batched bulks)
+//!  submit() ─▶ feeder ──(stride bulk k → shard k % N)──▶ shard queues
+//!             (batches                                        │
+//!              into bulks)                                    ▼
+//!   per shard:  TaskQueue ──────▶ per-worker TaskBuffer ─▶ executor slots
+//!               (bounded,          (bulk segments,          (each owns its
+//!                bulk-granular,     atomic claim            PJRT engine;
+//!                lock-free ring     cursors, lock-free      results leave in
+//!                or condvar)        task claims)            batched bulks)
+//!                   ▲
+//!                   └── work stealing: a dry shard's worker try-pulls
+//!                       the most-loaded sibling queue
 //! ```
 //!
+//! * **Shard ownership**: [`partition::Partition::split`] divides the
+//!   workers evenly (difference ≤ 1) across
+//!   [`config::RaptorConfig::n_coordinators`] shards; worker ids are
+//!   shard-major and globally unique, so every result attributes back to
+//!   the shard whose worker executed it — including stolen work.  Each
+//!   shard's queue is closed and drained by its own machinery; stealing
+//!   never transfers queue ownership, only individual bulks.
 //! * **Coordinator → worker** transfers happen in *bulks* (§III design
-//!   choice 5, default 128 tasks) to amortize queue operations;
+//!   choice 5, default 128 tasks) to amortize queue operations; the
+//!   feeder strides bulks round-robin across shard queues (strict — a
+//!   full shard queue blocks the feeder rather than silently re-routing,
+//!   leaving imbalance to the consumer-side stealing);
 //! * **worker → executor slot** handoff is *task-granular*: the worker's
 //!   slots share its [`worker::TaskBuffer`], so a long-tailed task holds
 //!   one slot while the rest of its bulk keeps flowing — bulked
 //!   transport without bulk-serial execution;
 //! * **executor slot → collector** returns are bulked again: slots batch
-//!   up to [`worker::RESULT_BATCH`] results per channel send.
+//!   up to [`worker::RESULT_BATCH`] results per channel send, into ONE
+//!   collector shared by all shards (where conservation is counted).
+//!
+//! ## Work stealing and its ordering contract
+//!
+//! With `RaptorConfig::steal` on (default) and more than one shard, a
+//! worker that finds its **home queue empty** raids siblings instead of
+//! parking, so a shard that drains its long tail early stops idling
+//! (the paper's utilization story).  The contract, in order:
+//!
+//! 1. home `try_pull_bulk` first — home work always beats a raid, and a
+//!    home `Drained` (closed + empty) is the worker's exit signal;
+//! 2. victim = [`dispatch::pick_victim`] over a backlog snapshot: the
+//!    most-loaded sibling with non-zero backlog, ties to the lowest
+//!    index;
+//! 3. ONE non-blocking `try_pull_bulk` on the victim — steals are
+//!    bulk-granular, thief-counted ([`worker::StealCounters`]), and the
+//!    thief never parks on (or spins over) a queue it does not own; a
+//!    lost race re-sweeps from step 1;
+//! 4. nothing anywhere: park on home with a short timeout
+//!    (`STEAL_POLL`, 1 ms) and re-sweep — bounded steal latency, no
+//!    busy-wait.
+//!
+//! Single-shard and `steal: false` runs never probe: they keep the plain
+//! blocking pull, so the measured lock-free hot path is unchanged.
 //!
 //! # The lock-free hot path
 //!
@@ -95,37 +138,48 @@
 //! # Task conservation
 //!
 //! The overlay guarantees `submitted == done + failed + canceled` as a
-//! structural invariant: every task handed to `submit` produces exactly
-//! one terminal [`crate::task::TaskResult`] —
+//! structural invariant — now **summed across shards and steals**: every
+//! task handed to `submit` produces exactly one terminal
+//! [`crate::task::TaskResult`], counted at the single collector —
 //!
-//! * executed tasks report `Done`/`Failed` from their executor slot;
-//! * on `stop()`, executors drain buffered tasks as `Canceled`, the
-//!   refill/dispatch threads drain the closed queue into the buffers
-//!   (so queue `pushed == pulled` always holds after teardown), and the
-//!   feeder reports tasks the closed queue refused — including the
-//!   final partial bulk — as `Canceled`;
+//! * executed tasks report `Done`/`Failed` from their executor slot (a
+//!   stolen task reports from the *thief's* slot — the steal moved the
+//!   bulk exactly once, decrementing the victim queue's backlog via its
+//!   `pulled` counter, so per-shard queue `pushed == pulled` still holds
+//!   after teardown);
+//! * on `stop()`, executors drain buffered tasks as `Canceled`, each
+//!   shard's refill/dispatch threads drain their closed queue into the
+//!   buffers, and the feeder reports tasks a closed queue refused —
+//!   including the final partial bulk — as `Canceled`;
 //! * failed tasks with retry budget are resubmitted in batched bulks via
-//!   a non-blocking push from `join`'s collector loop, with capped
-//!   exponential backoff when the queue is saturated; when the queue is
-//!   closed before the flush succeeds, the buffered failure is counted
-//!   as the terminal `Failed` outcome.
+//!   a non-blocking push from `join`'s collector loop to the
+//!   least-backlogged open queue, with capped exponential backoff when
+//!   every queue is saturated; when every queue is closed before the
+//!   flush succeeds, the buffered failure is counted as the terminal
+//!   `Failed` outcome.
 //!
 //! `tests/prop_invariants.rs` exercises this invariant over randomized
-//! submit/start/stop interleavings, policies, failures and retries —
-//! against **both** queue implementations.
+//! submit/start/stop interleavings, policies, failures, retries and
+//! pathologically skewed shard workloads (steals on and off) — against
+//! **both** queue implementations.
 //!
 //! # Modules
 //!
-//! * [`coordinator::Coordinator`] — real-mode coordinator with the paper's
-//!   `submit` / `start` / `join` / `stop` API;
-//! * [`worker::WorkerPool`] — per-worker segmented task buffers +
-//!   executor slots, each slot owning its PJRT engine;
+//! * [`coordinator::Coordinator`] — the paper's `submit` / `start` /
+//!   `join` / `stop` API (facade over the sharded engine);
+//! * [`sharded::ShardedCoordinator`] — N coordinator shards, the
+//!   striding feeder, the global collector, per-shard
+//!   [`sharded::ShardReport`]s;
+//! * [`worker::WorkerPool`] — one shard's segmented task buffers +
+//!   executor slots (each slot owning its PJRT engine) and the
+//!   steal-aware refill path;
 //! * [`queue`] — the [`queue::TaskQueue`] facade, the condvar
 //!   [`queue::BulkQueue`] baseline, and the simulator rate model;
 //! * [`ring`] — the lock-free [`ring::RingQueue`];
 //! * [`partition::Partition`] — node partitioning across coordinators
-//!   (§III design choice 3);
-//! * [`dispatch`] — the dispatch policies and the refill hysteresis.
+//!   (§III design choice 3), now wired into real-mode construction;
+//! * [`dispatch`] — the dispatch policies, the refill hysteresis, and
+//!   steal victim selection ([`dispatch::pick_victim`]).
 
 pub mod config;
 #[allow(clippy::module_inception)]
@@ -134,14 +188,20 @@ pub mod dispatch;
 pub mod partition;
 pub mod queue;
 pub mod ring;
+pub mod sharded;
 pub mod worker;
 
 pub use config::{EngineKind, RaptorConfig};
 pub use coordinator::{Coordinator, ResultCallback, RunReport};
 pub use dispatch::{
-    refill_watermark, should_refill, Dispatcher, Policy, DEFAULT_BULK, REFILL_FRACTION,
+    pick_victim, refill_watermark, should_refill, Dispatcher, Policy, DEFAULT_BULK,
+    REFILL_FRACTION,
 };
 pub use partition::Partition;
-pub use queue::{BulkQueue, QueueImpl, QueueModel, TaskQueue, TryPushError};
+pub use queue::{BulkQueue, QueueImpl, QueueModel, TaskQueue, TryPull, TryPushError};
 pub use ring::RingQueue;
-pub use worker::{TaskBuffer, TaskCursor, TryPop, WorkerPool, MAX_SYNTHETIC_SLEEP_S, RESULT_BATCH};
+pub use sharded::{ShardReport, ShardedCoordinator};
+pub use worker::{
+    StealCounters, TaskBuffer, TaskCursor, TryPop, WorkerPool, MAX_SYNTHETIC_SLEEP_S,
+    RESULT_BATCH,
+};

@@ -50,6 +50,28 @@ impl Partition {
         self.workers.iter().sum()
     }
 
+    /// First global worker id owned by `shard` (shard-major numbering:
+    /// shard 0 owns ids `0..workers[0]`, shard 1 the next slice, ...).
+    /// Real mode uses this to give every worker a globally unique id so
+    /// per-shard result attribution survives work stealing.
+    pub fn worker_base(&self, shard: usize) -> u32 {
+        assert!(shard < self.workers.len(), "shard {shard} out of range");
+        self.workers[..shard].iter().sum()
+    }
+
+    /// Which shard owns global worker id `w`, or `None` if `w` is past
+    /// the last worker (e.g. `task::NO_WORKER` on a canceled task).
+    pub fn shard_of_worker(&self, w: u32) -> Option<usize> {
+        let mut base = 0u32;
+        for (i, &n) in self.workers.iter().enumerate() {
+            base += n;
+            if w < base {
+                return Some(i);
+            }
+        }
+        None
+    }
+
     /// Every node is either reserved or hosts exactly one worker.
     pub fn check(&self, nodes: u32) {
         assert_eq!(
@@ -95,5 +117,24 @@ mod tests {
     #[should_panic(expected = "no worker nodes left")]
     fn all_reserved_panics() {
         Partition::split(4, 2, 4);
+    }
+
+    #[test]
+    fn worker_ids_are_shard_major() {
+        // 8 workers over 3 shards -> [3, 3, 2].
+        let p = Partition::split(8, 3, 0);
+        assert_eq!(p.workers, vec![3, 3, 2]);
+        assert_eq!(p.worker_base(0), 0);
+        assert_eq!(p.worker_base(1), 3);
+        assert_eq!(p.worker_base(2), 6);
+        // Round-trip: every worker id maps back to its owning shard.
+        for shard in 0..3usize {
+            let base = p.worker_base(shard);
+            for w in base..base + p.workers[shard] {
+                assert_eq!(p.shard_of_worker(w), Some(shard));
+            }
+        }
+        assert_eq!(p.shard_of_worker(8), None);
+        assert_eq!(p.shard_of_worker(u32::MAX), None, "NO_WORKER maps nowhere");
     }
 }

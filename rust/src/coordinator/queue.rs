@@ -100,6 +100,17 @@ impl<T> TaskQueue<T> {
         }
     }
 
+    /// Non-blocking pull: the work-stealing primitive.  A thief raiding a
+    /// sibling shard must never park on the victim's queue — an empty
+    /// victim answers [`TryPull::Empty`] immediately and the thief falls
+    /// back to its home queue.
+    pub fn try_pull_bulk(&self) -> TryPull<T> {
+        match self {
+            Self::Condvar(q) => q.try_pull_bulk(),
+            Self::Ring(q) => q.try_pull_bulk(),
+        }
+    }
+
     pub fn close(&self) {
         match self {
             Self::Condvar(q) => q.close(),
@@ -137,6 +148,17 @@ pub enum TryPushError<T> {
     Full(Vec<T>),
     /// The queue was closed; the tasks can never be delivered.
     Closed(Vec<T>),
+}
+
+/// Outcome of a non-blocking [`TaskQueue::try_pull_bulk`].
+#[derive(Debug)]
+pub enum TryPull<T> {
+    /// A bulk was dequeued; it now belongs to the caller.
+    Bulk(Vec<T>),
+    /// Nothing buffered right now, but producers may still push.
+    Empty,
+    /// Closed and fully drained; no bulk will ever appear again.
+    Drained,
 }
 
 /// Bounded blocking MPMC queue of bulks.
@@ -242,6 +264,23 @@ impl<T> BulkQueue<T> {
             }
             let (guard, _res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
             g = guard;
+        }
+    }
+
+    /// Non-blocking pull: never waits on an empty queue.  Steals and
+    /// home-queue probes use this so a thief can survey sibling shards
+    /// without ever parking on someone else's condvar.
+    pub fn try_pull_bulk(&self) -> TryPull<T> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(bulk) = g.bulks.pop_front() {
+            g.pulled += bulk.len() as u64;
+            self.not_full.notify_one();
+            return TryPull::Bulk(bulk);
+        }
+        if g.closed {
+            TryPull::Drained
+        } else {
+            TryPull::Empty
         }
     }
 
@@ -429,6 +468,28 @@ mod tests {
             assert!(q.is_closed());
             assert!(q.push_bulk(vec![4]).is_err());
             assert_eq!(q.pull_bulk(), None);
+            assert_eq!(q.counts(), (2, 2), "{which}: conservation");
+        }
+    }
+
+    #[test]
+    fn try_pull_over_both_impls() {
+        for which in [QueueImpl::Condvar, QueueImpl::Ring] {
+            let q = TaskQueue::new(which, 2);
+            match q.try_pull_bulk() {
+                TryPull::Empty => {}
+                other => panic!("{which}: expected Empty, got {other:?}"),
+            }
+            q.push_bulk(vec![7, 8]).unwrap();
+            match q.try_pull_bulk() {
+                TryPull::Bulk(b) => assert_eq!(b, vec![7, 8]),
+                other => panic!("{which}: expected Bulk, got {other:?}"),
+            }
+            q.close();
+            match q.try_pull_bulk() {
+                TryPull::Drained => {}
+                other => panic!("{which}: expected Drained, got {other:?}"),
+            }
             assert_eq!(q.counts(), (2, 2), "{which}: conservation");
         }
     }

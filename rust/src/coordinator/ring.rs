@@ -56,7 +56,7 @@ use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::queue::TryPushError;
+use super::queue::{TryPull, TryPushError};
 
 /// Closed flag folded into `enqueue_pos` (positions never get near it).
 const CLOSED_BIT: u64 = 1 << 63;
@@ -300,6 +300,22 @@ impl<T> RingQueue<T> {
     /// Pull one bulk; parks until available or closed-and-drained.
     pub fn pull_bulk(&self) -> Option<Vec<T>> {
         self.pull_until(None)
+    }
+
+    /// Non-blocking pull (the work-stealing path): one lock-free attempt,
+    /// no parking on the empty slow path.  A thief calls this on a victim
+    /// ring it does not own, so it must never enter the victim's
+    /// eventcount protocol.  `Empty` is conservative: a producer mid-write
+    /// also answers `Empty`, and the thief simply moves on.
+    pub fn try_pull_bulk(&self) -> TryPull<T> {
+        match self.pull_attempt() {
+            PullAttempt::Bulk(b) => {
+                self.wake_pushers();
+                TryPull::Bulk(b)
+            }
+            PullAttempt::Empty => TryPull::Empty,
+            PullAttempt::Drained => TryPull::Drained,
+        }
     }
 
     /// Pull with a timeout; `None` on timeout or closed-and-drained

@@ -1,0 +1,718 @@
+//! Multi-coordinator sharding (§III design choice 3, experiment 3): the
+//! real-mode engine behind [`super::coordinator::Coordinator`].
+//!
+//! The paper sustains its headline throughput by running *many*
+//! coordinators concurrently — 8 coordinators over 8336 nodes in
+//! experiment 3 — so no single queue endpoint sits on every task's hot
+//! path.  [`ShardedCoordinator`] reproduces that topology in-process:
+//!
+//! ```text
+//!   submit() ─▶ feeder ──(stride bulk k → shard k % N)──┐
+//!                                                       ▼
+//!            shard 0:  TaskQueue ─▶ workers 0..w0 ─▶ executor slots ─┐
+//!            shard 1:  TaskQueue ─▶ workers w0..w1 ─▶ ...            ├─▶ one
+//!            ...            ▲ ▲                                      │  collector
+//!            shard N-1: ... └─┴── work stealing (try_pull raids) ────┘
+//! ```
+//!
+//! * Each shard owns a slice of workers ([`Partition::split`] — even,
+//!   difference ≤ 1) and its own bounded [`TaskQueue`]; worker ids are
+//!   shard-major and globally unique, so every [`TaskResult`] maps back
+//!   to the shard whose worker produced it.
+//! * The feeder *strides* bulks round-robin across shard queues.
+//!   Striding is strict (no overflow re-routing): a shard's queue
+//!   filling up blocks the feeder on that shard, and imbalance is
+//!   handled on the consumer side by work stealing — which keeps the
+//!   skew observable instead of silently laundering it through the
+//!   submit path.
+//! * Results from every shard funnel into ONE collector (this is where
+//!   conservation is counted), which also owns the retry machinery.
+//!   Retry bulks are flushed to the least-backlogged open queue.
+//!
+//! Work stealing (the consumer-side balancer): a worker whose home
+//! shard's queue is empty raids the most-loaded sibling via non-blocking
+//! `try_pull_bulk` — bulk-granular, thief-counted, never parked on the
+//! victim.  The full steal ordering contract lives in
+//! [`super::worker::WorkerPool::spawn_shard`] / the module docs of
+//! [`super`].
+//!
+//! Conservation across shards and steals: `done + failed + canceled ==
+//! submitted` is counted at the single collector, and queue
+//! `pushed == pulled` holds per shard after teardown — a stolen bulk is
+//! pulled from the *victim's* queue (the victim's `pulled` counter moves,
+//! the thief's steal counter moves), so the per-shard and summed
+//! invariants are both exact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::metrics::{utilization, Timeline};
+use crate::task::{TaskDesc, TaskResult, TaskState, NO_WORKER};
+
+use super::config::RaptorConfig;
+use super::coordinator::{ResultCallback, RunReport};
+use super::partition::Partition;
+use super::queue::{TaskQueue, TryPushError};
+use super::worker::{StealCounters, WorkerPool};
+
+/// Retry-flush backoff bounds: after every open queue refuses a flush
+/// with `Full`, the next attempt waits `RETRY_BACKOFF_MIN`, doubling per
+/// consecutive failure up to `RETRY_BACKOFF_MAX`.  Without this the
+/// collector busy-spins flush attempts against saturated queues — each
+/// failed `try_push_bulk` is pure contention on the very queues the
+/// workers are trying to drain.
+const RETRY_BACKOFF_MIN: Duration = Duration::from_micros(500);
+const RETRY_BACKOFF_MAX: Duration = Duration::from_millis(50);
+
+/// Per-shard slice of a [`RunReport`]: what this shard's workers
+/// produced and what moved through its queue.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Shard index (0-based).
+    pub shard: usize,
+    /// Workers this shard owns.
+    pub workers: u32,
+    /// Terminal results produced by this shard's workers — including
+    /// results for tasks its workers *stole* from siblings.  Feeder-
+    /// canceled tasks (no worker ever touched them) appear in no shard,
+    /// so the shard sums can fall short of the run totals by exactly
+    /// that count.
+    pub done: u64,
+    pub failed: u64,
+    pub canceled: u64,
+    /// Items pushed to / pulled from this shard's queue.  Equal after a
+    /// completed `join`/`stop`; a task stolen by another shard still
+    /// counts as *pulled here* (the theft is the pull).
+    pub queue_pushed: u64,
+    pub queue_pulled: u64,
+    /// Bulks/tasks this shard's workers stole FROM sibling queues
+    /// (thief-attributed).
+    pub steal_bulks: u64,
+    pub steal_tasks: u64,
+}
+
+/// Coordinator states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Created,
+    Started,
+    Finished,
+}
+
+/// N coordinator shards behind the paper's `submit`/`start`/`join`/`stop`
+/// API.  `RaptorConfig::n_coordinators == 1` degenerates to exactly the
+/// pre-sharding single-coordinator pipeline (one queue, blocking pulls,
+/// no steal probes).
+pub struct ShardedCoordinator {
+    cfg: RaptorConfig,
+    partition: Partition,
+    submit_tx: Option<Sender<TaskDesc>>,
+    submit_rx: Option<Receiver<TaskDesc>>,
+    submitted: Arc<AtomicU64>,
+    queues: Vec<Arc<TaskQueue<TaskDesc>>>,
+    results_rx: Option<Receiver<Vec<TaskResult>>>,
+    results_tx: Option<Sender<Vec<TaskResult>>>,
+    pools: Vec<WorkerPool>,
+    steals: Vec<Arc<StealCounters>>,
+    feeder: Option<std::thread::JoinHandle<()>>,
+    callback: Option<ResultCallback>,
+    phase: Phase,
+    t0: Instant,
+}
+
+impl ShardedCoordinator {
+    pub fn new(cfg: RaptorConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let partition = cfg.partition();
+        let (submit_tx, submit_rx) = channel();
+        let (results_tx, results_rx) = channel();
+        let queues = (0..partition.n_coordinators())
+            .map(|_| Arc::new(TaskQueue::new(cfg.queue_impl, cfg.queue_capacity)))
+            .collect();
+        Ok(Self {
+            cfg,
+            partition,
+            submit_tx: Some(submit_tx),
+            submit_rx: Some(submit_rx),
+            submitted: Arc::new(AtomicU64::new(0)),
+            queues,
+            results_rx: Some(results_rx),
+            results_tx: Some(results_tx),
+            pools: Vec::new(),
+            steals: Vec::new(),
+            feeder: None,
+            callback: None,
+            phase: Phase::Created,
+            t0: Instant::now(),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Register a per-result callback (must precede `join`).
+    pub fn on_result(&mut self, cb: ResultCallback) {
+        self.callback = Some(cb);
+    }
+
+    /// Submit tasks (allowed before and after `start`, until `join`).
+    pub fn submit(&mut self, tasks: impl IntoIterator<Item = TaskDesc>) -> anyhow::Result<u64> {
+        let tx = self
+            .submit_tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("coordinator already joined"))?;
+        let mut n = 0;
+        for t in tasks {
+            tx.send(t).map_err(|_| anyhow::anyhow!("feeder gone"))?;
+            n += 1;
+        }
+        self.submitted.fetch_add(n, Ordering::SeqCst);
+        Ok(n)
+    }
+
+    /// Launch every shard's worker pool and the striding bulk feeder.
+    pub fn start(&mut self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.phase == Phase::Created, "already started");
+        self.t0 = Instant::now();
+        let results_tx = self.results_tx.take().unwrap();
+        // The feeder holds its own result sender: tasks a closed queue
+        // refuses surface as Canceled instead of silently vanishing.
+        let feeder_tx = results_tx.clone();
+        let queues_shared = Arc::new(self.queues.clone());
+        for shard in 0..self.n_shards() {
+            let steals = Arc::new(StealCounters::new());
+            self.pools.push(WorkerPool::spawn_shard(
+                &self.cfg,
+                shard,
+                self.partition.workers[shard],
+                self.partition.worker_base(shard),
+                queues_shared.clone(),
+                results_tx.clone(),
+                self.t0,
+                steals.clone(),
+            ));
+            self.steals.push(steals);
+        }
+        // `results_tx` drops here: the collector's channel disconnects
+        // once every pool thread and the feeder are gone.
+        drop(results_tx);
+
+        // Bulk feeder: drains the submission channel into bulks, striding
+        // bulk k to shard k % N.  The queues stay open after drain: `join`
+        // may still push retries and closes them once every task has
+        // reached a terminal state.
+        //
+        // Conservation: once any queue refuses a push (closed by `stop` —
+        // queues only close together), the refused bulk AND every
+        // later-submitted task — including the final partial bulk — are
+        // reported Canceled through `feeder_tx`, so
+        // `submitted == done + failed + canceled` still balances and
+        // `join` converges by counting rather than by channel disconnect.
+        let rx = self.submit_rx.take().unwrap();
+        let queues = self.queues.clone();
+        let bulk_size = self.cfg.bulk_size;
+        let t0 = self.t0;
+        self.feeder = Some(std::thread::spawn(move || {
+            let n_shards = queues.len();
+            let mut next_shard = 0usize;
+            let mut bulk = Vec::with_capacity(bulk_size);
+            // Tasks the queues refused: terminal-Canceled, never dropped.
+            let mut dropped: Vec<TaskDesc> = Vec::new();
+            let mut route = |bulk: Vec<TaskDesc>, next_shard: &mut usize| {
+                let q = &queues[*next_shard];
+                *next_shard = (*next_shard + 1) % n_shards;
+                q.push_bulk(bulk)
+            };
+            while let Ok(task) = rx.recv() {
+                if !dropped.is_empty() {
+                    dropped.push(task);
+                    continue;
+                }
+                bulk.push(task);
+                if bulk.len() >= bulk_size {
+                    if let Err(refused) = route(std::mem::take(&mut bulk), &mut next_shard) {
+                        dropped = refused;
+                    }
+                }
+            }
+            if dropped.is_empty() && !bulk.is_empty() {
+                if let Err(refused) = route(std::mem::take(&mut bulk), &mut next_shard) {
+                    dropped = refused;
+                }
+            }
+            if !dropped.is_empty() {
+                let now = t0.elapsed().as_secs_f64();
+                let canceled: Vec<TaskResult> = dropped
+                    .into_iter()
+                    .map(|task| TaskResult::canceled(task.uid, now, NO_WORKER))
+                    .collect();
+                let _ = feeder_tx.send(canceled);
+            }
+        }));
+        self.phase = Phase::Started;
+        Ok(())
+    }
+
+    /// Wait for every submitted task to reach a terminal state; tear the
+    /// overlay down and report.
+    ///
+    /// Conservation contract: `done + failed + canceled == submitted`,
+    /// counted at this single collector regardless of which shard (or
+    /// thief) executed each task.  Every submitted task produces exactly
+    /// one terminal result — from an executor, from the feeder (a closed
+    /// queue refused it after `stop`), or from the retry bookkeeping
+    /// below (retry impossible after `stop`).
+    pub fn join(&mut self) -> anyhow::Result<RunReport> {
+        anyhow::ensure!(self.phase == Phase::Started, "not started");
+        // No more submissions: dropping the sender lets the feeder drain.
+        drop(self.submit_tx.take());
+
+        /// Terminal-state accounting shared by the receive loop and the
+        /// abandoned-retry paths, tallied globally and per shard.
+        struct Acc {
+            received: u64,
+            done: u64,
+            failed: u64,
+            canceled: u64,
+            /// [done, failed, canceled] per shard, attributed by the
+            /// executing worker's id (stolen tasks land on the thief).
+            per_shard: Vec<[u64; 3]>,
+            first_task: f64,
+            timeline: Timeline,
+            results: Vec<TaskResult>,
+            keep: bool,
+        }
+        impl Acc {
+            fn terminal(
+                &mut self,
+                r: TaskResult,
+                shard: Option<usize>,
+                callback: &mut Option<ResultCallback>,
+            ) -> anyhow::Result<()> {
+                self.received += 1;
+                let lane = match r.state {
+                    TaskState::Done => {
+                        self.done += 1;
+                        0
+                    }
+                    TaskState::Failed => {
+                        self.failed += 1;
+                        1
+                    }
+                    TaskState::Canceled => {
+                        self.canceled += 1;
+                        2
+                    }
+                    s => anyhow::bail!("non-terminal result state {s:?}"),
+                };
+                if let Some(s) = shard {
+                    self.per_shard[s][lane] += 1;
+                }
+                self.first_task = self.first_task.min(r.started);
+                self.timeline.record(r.started, r.finished, 1.0);
+                if let Some(cb) = callback {
+                    cb(&r);
+                }
+                if self.keep {
+                    self.results.push(r);
+                }
+                Ok(())
+            }
+        }
+
+        let rx = self.results_rx.take().unwrap();
+        let expected = || self.submitted.load(Ordering::SeqCst);
+        let mut acc = Acc {
+            received: 0,
+            done: 0,
+            failed: 0,
+            canceled: 0,
+            per_shard: vec![[0; 3]; self.n_shards()],
+            first_task: f64::INFINITY,
+            timeline: Timeline::new(),
+            results: Vec::new(),
+            keep: self.cfg.keep_results,
+        };
+        // Retry bookkeeping (failure-management policy): uid -> attempts.
+        let mut attempts: std::collections::HashMap<crate::task::TaskId, u32> =
+            std::collections::HashMap::new();
+        // Failed results awaiting resubmission, paired with the task to
+        // resubmit (cloned out of the failed result exactly once).
+        // Retries are flushed as ONE bulk with a non-blocking push: this
+        // thread is the result collector, and a blocking push against a
+        // full queue would stall the draining that makes queues empty
+        // out.  The flush targets open queues least-backlogged-first —
+        // a retry is not pinned to the shard that failed it.
+        let mut retry_buf: Vec<(TaskResult, TaskDesc)> = Vec::new();
+        // Capped exponential backoff on retry flushes: `next_flush` gates
+        // the attempts, doubling the gap per consecutive all-Full sweep
+        // up to RETRY_BACKOFF_MAX, resetting once a flush lands.
+        let mut backoff = RETRY_BACKOFF_MIN;
+        let mut next_flush = Instant::now();
+        let mut retry_flush_stalls: u64 = 0;
+        while acc.received < expected() {
+            if !retry_buf.is_empty() && Instant::now() >= next_flush {
+                let (results, tasks): (Vec<TaskResult>, Vec<TaskDesc>) =
+                    retry_buf.drain(..).unzip();
+                let mut order: Vec<usize> = (0..self.n_shards()).collect();
+                order.sort_by_key(|&i| self.queues[i].backlog_bulks());
+                let mut pending = Some(tasks);
+                let mut any_open = false;
+                for i in order {
+                    let Some(tasks) = pending.take() else { break };
+                    match self.queues[i].try_push_bulk(tasks) {
+                        Ok(()) => {}
+                        Err(TryPushError::Full(t)) => {
+                            any_open = true;
+                            pending = Some(t);
+                        }
+                        Err(TryPushError::Closed(t)) => pending = Some(t),
+                    }
+                }
+                match pending {
+                    // Some queue accepted the bulk: the retries are in
+                    // flight again.
+                    None => {
+                        backoff = RETRY_BACKOFF_MIN;
+                    }
+                    // Every queue full (workers are pulling, so more
+                    // results — and another flush chance — are on the
+                    // way): re-pair and back off; an immediate retry
+                    // would just contend on the queues being drained.
+                    Some(tasks) if any_open => {
+                        retry_buf = results.into_iter().zip(tasks).collect();
+                        retry_flush_stalls += 1;
+                        next_flush = Instant::now() + backoff;
+                        backoff = (backoff * 2).min(RETRY_BACKOFF_MAX);
+                    }
+                    // Every queue closed by `stop`: the retries can never
+                    // run, so the buffered failures are terminal.
+                    Some(_) => {
+                        backoff = RETRY_BACKOFF_MIN;
+                        for r in results {
+                            let shard = self.partition.shard_of_worker(r.worker);
+                            acc.terminal(r, shard, &mut self.callback)?;
+                        }
+                    }
+                }
+                if acc.received >= expected() {
+                    break;
+                }
+            }
+            // Receive the next result-bulk.  With retries pending, bound
+            // the wait by the flush deadline: a plain recv could park
+            // forever when the only outstanding tasks are the buffered
+            // retries themselves.
+            let bulk = if retry_buf.is_empty() {
+                match rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => break, // all workers gone
+                }
+            } else {
+                let wait = next_flush.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(wait) {
+                    Ok(b) => b,
+                    Err(RecvTimeoutError::Timeout) => continue, // flush due
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            };
+            for r in bulk {
+                // Failed task with retry budget left: buffer for
+                // resubmission instead of counting it as terminal.
+                let retryable = r.state == TaskState::Failed && r.failed_task.is_some();
+                if retryable && self.cfg.max_retries > 0 {
+                    let n = attempts.entry(r.uid).or_insert(0);
+                    if *n < self.cfg.max_retries {
+                        *n += 1;
+                        log::info!("retrying task {} (attempt {})", r.uid, *n + 1);
+                        let task = r
+                            .failed_task
+                            .as_deref()
+                            .cloned()
+                            .expect("retry result retains its task");
+                        retry_buf.push((r, task));
+                        continue; // not terminal yet
+                    }
+                }
+                let shard = self.partition.shard_of_worker(r.worker);
+                acc.terminal(r, shard, &mut self.callback)?;
+            }
+        }
+        // Disconnect fallback: if the channel died with retries still
+        // buffered, their stored failures are the terminal outcomes.
+        for (r, _) in retry_buf.drain(..) {
+            let shard = self.partition.shard_of_worker(r.worker);
+            acc.terminal(r, shard, &mut self.callback)?;
+        }
+        // Every task is terminal: release the workers.  All queues close
+        // together — a thief observing its home Drained may exit, but by
+        // this point every queue is already empty.
+        for q in &self.queues {
+            q.close();
+        }
+        if let Some(f) = self.feeder.take() {
+            let _ = f.join();
+        }
+        for p in self.pools.drain(..) {
+            p.join();
+        }
+        self.phase = Phase::Finished;
+
+        let shards: Vec<ShardReport> = (0..self.n_shards())
+            .map(|s| {
+                let (queue_pushed, queue_pulled) = self.queues[s].counts();
+                let (steal_bulks, steal_tasks) = self.steals[s].snapshot();
+                ShardReport {
+                    shard: s,
+                    workers: self.partition.workers[s],
+                    done: acc.per_shard[s][0],
+                    failed: acc.per_shard[s][1],
+                    canceled: acc.per_shard[s][2],
+                    queue_pushed,
+                    queue_pulled,
+                    steal_bulks,
+                    steal_tasks,
+                }
+            })
+            .collect();
+        let steal_bulks = shards.iter().map(|s| s.steal_bulks).sum();
+        let steal_tasks = shards.iter().map(|s| s.steal_tasks).sum();
+
+        let wall_s = self.t0.elapsed().as_secs_f64();
+        let util = utilization(&acc.timeline, self.cfg.capacity() as f64, Some(wall_s));
+        let rate = if wall_s > 0.0 {
+            acc.done as f64 / wall_s
+        } else {
+            0.0
+        };
+        Ok(RunReport {
+            done: acc.done,
+            failed: acc.failed,
+            canceled: acc.canceled,
+            wall_s,
+            first_task_s: if acc.first_task.is_finite() {
+                acc.first_task
+            } else {
+                0.0
+            },
+            timeline: acc.timeline,
+            utilization: util,
+            rate_per_s: rate,
+            retry_flush_stalls,
+            steal_bulks,
+            steal_tasks,
+            shards,
+            results: acc.results,
+        })
+    }
+
+    /// Cancel outstanding work, then join.
+    pub fn stop(&mut self) -> anyhow::Result<RunReport> {
+        anyhow::ensure!(self.phase == Phase::Started, "not started");
+        drop(self.submit_tx.take());
+        for p in &self.pools {
+            p.cancel();
+        }
+        // After cancel, each shard's workers drain their queue as
+        // Canceled (thieves may drain a victim's tail too — either way
+        // every bulk is pulled exactly once), the feeder reports
+        // queue-refused tasks as Canceled, and buffered retries resolve
+        // to Failed, so join's accounting converges to exactly
+        // `submitted` terminal results.
+        self.join()
+    }
+
+    /// (tasks pushed, tasks pulled) summed over every shard queue.  After
+    /// a completed `join`/`stop` the two are equal: each queue is drained
+    /// by its own workers and by thieves, and a steal moves the victim's
+    /// `pulled` counter.
+    pub fn queue_counts(&self) -> (u64, u64) {
+        self.queues.iter().map(|q| q.counts()).fold(
+            (0, 0),
+            |(push_acc, pull_acc), (pushed, pulled)| (push_acc + pushed, pull_acc + pulled),
+        )
+    }
+
+    /// Per-shard (pushed, pulled) queue counts, index = shard.
+    pub fn shard_queue_counts(&self) -> Vec<(u64, u64)> {
+        self.queues.iter().map(|q| q.counts()).collect()
+    }
+}
+
+impl Drop for ShardedCoordinator {
+    fn drop(&mut self) {
+        if self.phase == Phase::Started {
+            for p in &self.pools {
+                p.cancel();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::EngineKind;
+    use crate::task::{DockCall, ExecCall};
+
+    fn fn_task(uid: u64) -> TaskDesc {
+        TaskDesc::function(
+            uid,
+            DockCall {
+                library_seed: 1,
+                protein_seed: 7,
+                first_ligand_id: uid * 8,
+                bundle: 8,
+            },
+        )
+    }
+
+    fn sharded_cfg(n_coordinators: u32, steal: bool) -> RaptorConfig {
+        RaptorConfig {
+            n_workers: 2 * n_coordinators,
+            n_coordinators,
+            steal,
+            executors_per_worker: 2,
+            bulk_size: 16,
+            engine: EngineKind::Synthetic,
+            keep_results: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sharded_run_completes_every_task() {
+        for n in [1u32, 2, 4] {
+            let mut c = ShardedCoordinator::new(sharded_cfg(n, true)).unwrap();
+            c.submit((0..400).map(fn_task)).unwrap();
+            c.start().unwrap();
+            let report = c.join().unwrap();
+            assert_eq!(report.done, 400, "{n} shards");
+            assert_eq!(report.shards.len(), n as usize);
+            // Exactly-once across shards and steals.
+            let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+            uids.sort_unstable();
+            assert_eq!(uids, (0..400).collect::<Vec<u64>>());
+            // Per-shard done counts sum to the run total (no feeder
+            // cancels here).
+            let shard_done: u64 = report.shards.iter().map(|s| s.done).sum();
+            assert_eq!(shard_done, 400, "{n} shards: attribution");
+            // Conservation per shard and summed.
+            for s in &report.shards {
+                assert_eq!(s.queue_pushed, s.queue_pulled, "shard {} drained", s.shard);
+            }
+            let (pushed, pulled) = c.queue_counts();
+            assert_eq!(pushed, 400);
+            assert_eq!(pulled, 400);
+        }
+    }
+
+    #[test]
+    fn feeder_strides_bulks_across_shards() {
+        // 8 bulks over 4 shards with ample queue capacity: exactly 2
+        // bulks' worth of tasks pushed per shard queue.
+        let cfg = RaptorConfig {
+            queue_capacity: 64,
+            exec_time_scale: 0.0,
+            ..sharded_cfg(4, false)
+        };
+        let mut c = ShardedCoordinator::new(cfg).unwrap();
+        c.submit((0..128).map(fn_task)).unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 128);
+        for (pushed, pulled) in c.shard_queue_counts() {
+            assert_eq!(pushed, 32, "strict round-robin striding");
+            assert_eq!(pulled, 32);
+        }
+        assert_eq!(report.steal_bulks, 0, "steal disabled");
+    }
+
+    #[test]
+    fn sharded_stop_conserves_tasks() {
+        let cfg = RaptorConfig {
+            exec_time_scale: 1.0,
+            queue_capacity: 4,
+            ..sharded_cfg(3, true)
+        };
+        let mut c = ShardedCoordinator::new(cfg).unwrap();
+        c.submit((0..300).map(|i| {
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec![],
+                    sim_duration: 0.02,
+                },
+            )
+        }))
+        .unwrap();
+        c.start().unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let report = c.stop().unwrap();
+        assert_eq!(report.done + report.failed + report.canceled, 300);
+        assert!(report.canceled > 0, "stop landed after completion");
+        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(uids, (0..300).collect::<Vec<u64>>(), "one result per task");
+        let (pushed, pulled) = c.queue_counts();
+        assert_eq!(pushed, pulled, "queues drained even under stop");
+    }
+
+    #[test]
+    fn skewed_shard_gets_robbed() {
+        // Stride-aware skew: every bulk routed to shard 0 sleeps, every
+        // other bulk is instant.  Shard 1's workers drain their fast
+        // share, find home empty while shard 0's queue still holds
+        // backlog, and must steal.
+        let cfg = RaptorConfig {
+            n_workers: 2,
+            n_coordinators: 2,
+            steal: true,
+            executors_per_worker: 1,
+            bulk_size: 8,
+            queue_capacity: 8,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            keep_results: true,
+            ..Default::default()
+        };
+        let bulk = cfg.bulk_size as u64;
+        let mut c = ShardedCoordinator::new(cfg).unwrap();
+        c.submit((0..400).map(|i| {
+            if (i / bulk) % 2 == 0 {
+                // Shard 0's stride: sleeper.
+                TaskDesc::executable(
+                    i,
+                    ExecCall {
+                        command: vec![],
+                        sim_duration: 0.005,
+                    },
+                )
+            } else {
+                fn_task(i)
+            }
+        }))
+        .unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 400);
+        assert!(
+            report.steal_bulks > 0,
+            "skewed workload must trigger steals: {:?}",
+            report.shards
+        );
+        assert_eq!(
+            report.steal_tasks,
+            report
+                .shards
+                .iter()
+                .map(|s| s.steal_tasks)
+                .sum::<u64>()
+        );
+        let (pushed, pulled) = c.queue_counts();
+        assert_eq!(pushed, pulled, "conservation across steals");
+    }
+}

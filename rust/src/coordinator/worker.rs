@@ -39,15 +39,15 @@ use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::runtime::DockEngine;
 use crate::task::{TaskDesc, TaskKind, TaskResult, TaskState};
 use crate::util::rng::SplitMix64;
 
 use super::config::{EngineKind, RaptorConfig};
-use super::dispatch::{refill_watermark, Dispatcher, Policy};
-use super::queue::TaskQueue;
+use super::dispatch::{pick_victim, refill_watermark, Dispatcher, Policy};
+use super::queue::{TaskQueue, TryPull};
 
 /// Synthetic executable tasks (`command == []`) sleep for their scaled
 /// `sim_duration`, silently clamped to this many seconds.  The clamp is a
@@ -56,6 +56,13 @@ use super::queue::TaskQueue;
 /// slot for that long in wall-clock time.  Scale durations with
 /// `RaptorConfig::exec_time_scale` instead of relying on the clamp.
 pub const MAX_SYNTHETIC_SLEEP_S: f64 = 10.0;
+
+/// How long a thief parks on its (empty, open) home queue between steal
+/// sweeps.  Bounds steal latency: a bulk landing at a sibling while the
+/// thief is parked is noticed within one poll.  The single-shard and
+/// steal-off paths never poll — they use the queue's blocking pull, so
+/// the measured lock-free hot path is untouched.
+const STEAL_POLL: Duration = Duration::from_millis(1);
 
 /// Executor slots flush their local result batch to the collector once it
 /// holds this many results (and always before blocking on an empty
@@ -383,40 +390,160 @@ impl<T> TaskBuffer<T> {
     }
 }
 
-/// Shared handle the coordinator uses to control its workers.
+/// Per-shard steal tally: bulks/tasks this shard's workers pulled from
+/// *sibling* shards' queues.  Thief-attributed — a shard's counters say
+/// how much it raided, not how much it was raided for.  Relaxed ordering
+/// throughout: the counters are only read for reporting (after teardown,
+/// or as an approximate live gauge), never for synchronization.
+#[derive(Debug, Default)]
+pub struct StealCounters {
+    pub bulks: AtomicU64,
+    pub tasks: AtomicU64,
+}
+
+impl StealCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (stolen bulks, stolen tasks).
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.bulks.load(Ordering::Relaxed),
+            self.tasks.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Fetch the next bulk for a worker of shard `home`: the home queue
+/// first, then — with stealing on — a raid on the most-loaded sibling.
+///
+/// Steal ordering contract (see the module docs in [`super`]):
+/// 1. home `try_pull` — home work always has priority over raids;
+/// 2. on home-Empty, `pick_victim` over a backlog snapshot, then ONE
+///    non-blocking `try_pull` on the victim (a lost race just falls
+///    through — the thief never parks on, or spins over, a queue it
+///    does not own);
+/// 3. nothing anywhere: park on home with a [`STEAL_POLL`] timeout and
+///    sweep again.
+///
+/// Returns `None` — the worker's exit signal — only when the *home*
+/// queue is closed and drained.  Sibling backlog that exists at that
+/// point is drained by the sibling's own workers (every shard has ≥ 1
+/// worker, enforced by `RaptorConfig::validate`), so "closed and
+/// drained, summed across shards" still means every task was pulled
+/// exactly once.
+fn next_bulk(
+    queues: &[Arc<TaskQueue<TaskDesc>>],
+    home: usize,
+    steal: bool,
+    steals: &StealCounters,
+) -> Option<Vec<TaskDesc>> {
+    if queues.len() == 1 || !steal {
+        // Single shard or ablation: the plain blocking pull — no polling,
+        // no backlog scans on the hot path.
+        return queues[home].pull_bulk();
+    }
+    loop {
+        match queues[home].try_pull_bulk() {
+            TryPull::Bulk(b) => return Some(b),
+            TryPull::Drained => return None,
+            TryPull::Empty => {}
+        }
+        let backlogs: Vec<usize> = queues.iter().map(|q| q.backlog_bulks()).collect();
+        if let Some(victim) = pick_victim(&backlogs, home) {
+            if let TryPull::Bulk(b) = queues[victim].try_pull_bulk() {
+                steals.bulks.fetch_add(1, Ordering::Relaxed);
+                steals.tasks.fetch_add(b.len() as u64, Ordering::Relaxed);
+                return Some(b);
+            }
+            // Raced out or the victim drained meanwhile: re-sweep.
+            continue;
+        }
+        // Every queue empty: park on home (bounded, so work appearing at
+        // a sibling is noticed within one poll).
+        if let Some(b) = queues[home].pull_bulk_timeout(STEAL_POLL) {
+            return Some(b);
+        }
+    }
+}
+
+/// Shared handle the coordinator uses to control its workers — one pool
+/// per coordinator shard (a single-coordinator run is one pool over one
+/// queue).
 pub struct WorkerPool {
+    /// The shard's *home* queue (`queues[home]`).
     pub queue: Arc<TaskQueue<TaskDesc>>,
     pub cancel: Arc<AtomicBool>,
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Executors that finished their engine bootstrap.
     pub ready: Arc<AtomicU64>,
     buffers: Vec<Arc<TaskBuffer<TaskDesc>>>,
+    /// Bulks/tasks this shard's workers stole from sibling shards.
+    pub steals: Arc<StealCounters>,
 }
 
 impl WorkerPool {
-    /// Spawn the overlay's worker side:
-    /// `n_workers * executors_per_worker` executor threads sharing
-    /// per-worker task buffers, plus the dispatch machinery the policy
-    /// needs (one refill thread per worker for [`Policy::PullBased`], a
-    /// single dispatcher thread for the push policies).
-    ///
-    /// Panics on [`Policy::Static`], which only exists for the simulator
-    /// ablations (`RaptorConfig::validate` rejects it before this).
+    /// Spawn a single-coordinator pool over one queue (the historical
+    /// entry point; tests and the simulator bridge use it directly).
     pub fn spawn(
         cfg: &RaptorConfig,
         queue: Arc<TaskQueue<TaskDesc>>,
         results: Sender<Vec<TaskResult>>,
         t0: Instant,
     ) -> Self {
+        Self::spawn_shard(
+            cfg,
+            0,
+            cfg.n_workers,
+            0,
+            Arc::new(vec![queue]),
+            results,
+            t0,
+            Arc::new(StealCounters::new()),
+        )
+    }
+
+    /// Spawn the worker side of coordinator shard `home`:
+    /// `n_workers * executors_per_worker` executor threads sharing
+    /// per-worker task buffers, plus the dispatch machinery the policy
+    /// needs (one refill thread per worker for [`Policy::PullBased`], a
+    /// single dispatcher thread for the push policies).  The shard owns
+    /// `queues[home]`; with `cfg.steal` on and siblings present, its
+    /// refill/dispatch threads raid sibling queues when home runs dry
+    /// (see [`next_bulk`]).
+    ///
+    /// `worker_base` offsets this shard's worker ids so every worker in a
+    /// sharded run is globally unique — per-shard result attribution
+    /// (and the steal accounting built on it) needs `TaskResult::worker`
+    /// to map back to exactly one shard.
+    ///
+    /// Panics on [`Policy::Static`], which only exists for the simulator
+    /// ablations (`RaptorConfig::validate` rejects it before this).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_shard(
+        cfg: &RaptorConfig,
+        home: usize,
+        n_workers: u32,
+        worker_base: u32,
+        queues: Arc<Vec<Arc<TaskQueue<TaskDesc>>>>,
+        results: Sender<Vec<TaskResult>>,
+        t0: Instant,
+        steals: Arc<StealCounters>,
+    ) -> Self {
+        assert!(home < queues.len(), "home shard out of range");
+        assert!(n_workers > 0, "a shard needs workers to drain its queue");
         let cancel = Arc::new(AtomicBool::new(false));
         let ready = Arc::new(AtomicU64::new(0));
         let slots = cfg.executors_per_worker as usize;
-        let buffers: Vec<Arc<TaskBuffer<TaskDesc>>> = (0..cfg.n_workers)
+        let steal = cfg.steal;
+        let buffers: Vec<Arc<TaskBuffer<TaskDesc>>> = (0..n_workers)
             .map(|_| Arc::new(TaskBuffer::new(cfg.worker_buffer_capacity())))
             .collect();
         let mut handles = Vec::new();
 
-        for w in 0..cfg.n_workers {
+        for w in 0..n_workers {
+            let gid = worker_base + w;
             let buffer = buffers[w as usize].clone();
             for e in 0..cfg.executors_per_worker {
                 let buffer = buffer.clone();
@@ -426,9 +553,9 @@ impl WorkerPool {
                 let engine = cfg.engine;
                 let scale = cfg.exec_time_scale;
                 let handle = std::thread::Builder::new()
-                    .name(format!("raptor-w{w}e{e}"))
+                    .name(format!("raptor-w{gid}e{e}"))
                     .spawn(move || {
-                        executor_loop(w, engine, scale, &buffer, &results, &cancel, &ready, t0);
+                        executor_loop(gid, engine, scale, &buffer, &results, &cancel, &ready, t0);
                     })
                     .expect("spawning executor thread");
                 handles.push(handle);
@@ -437,31 +564,40 @@ impl WorkerPool {
 
         match cfg.dispatch {
             Policy::PullBased => {
-                for w in 0..cfg.n_workers {
-                    let queue = queue.clone();
+                for w in 0..n_workers {
+                    let gid = worker_base + w;
+                    let queues = queues.clone();
                     let buffer = buffers[w as usize].clone();
                     let results = results.clone();
                     let cancel = cancel.clone();
+                    let steals = steals.clone();
                     let bulk = cfg.bulk_size;
                     let handle = std::thread::Builder::new()
-                        .name(format!("raptor-w{w}-refill"))
+                        .name(format!("raptor-w{gid}-refill"))
                         .spawn(move || {
-                            refill_loop(w, &queue, &buffer, slots, bulk, &cancel, &results, t0);
+                            refill_loop(
+                                gid, &queues, home, steal, &steals, &buffer, slots, bulk,
+                                &cancel, &results, t0,
+                            );
                         })
                         .expect("spawning refill thread");
                     handles.push(handle);
                 }
             }
             Policy::RoundRobin | Policy::LeastLoaded => {
-                let queue = queue.clone();
+                let queues = queues.clone();
                 let bufs = buffers.clone();
                 let results = results.clone();
-                let seed = 0x0D15_7A7C_4E57u64 ^ cfg.n_workers as u64;
+                let steals = steals.clone();
+                let seed = 0x0D15_7A7C_4E57u64 ^ n_workers as u64 ^ ((home as u64) << 32);
                 let dispatcher = Dispatcher::new(cfg.dispatch, seed);
                 let handle = std::thread::Builder::new()
-                    .name("raptor-dispatch".to_string())
+                    .name(format!("raptor-c{home}-dispatch"))
                     .spawn(move || {
-                        dispatch_loop(&queue, &bufs, dispatcher, &results, t0);
+                        dispatch_loop(
+                            &queues, home, steal, &steals, &bufs, worker_base, dispatcher,
+                            &results, t0,
+                        );
                     })
                     .expect("spawning dispatcher thread");
                 handles.push(handle);
@@ -472,11 +608,12 @@ impl WorkerPool {
         }
 
         Self {
-            queue,
+            queue: queues[home].clone(),
             cancel,
             handles,
             ready,
             buffers,
+            steals,
         }
     }
 
@@ -508,13 +645,18 @@ impl WorkerPool {
 
 /// Pull-based refill (the paper's production configuration): keep the
 /// worker's buffer between the `should_refill` watermark and its
-/// capacity, pulling one bulk at a time from the coordinator queue.
-/// Exits — closing the buffer so the executors can drain and stop —
-/// once the queue is closed and empty.
+/// capacity, pulling one bulk at a time from the shard's home queue —
+/// or, when home is empty and stealing is on, from the most-loaded
+/// sibling shard (see [`next_bulk`]).  Exits — closing the buffer so
+/// the executors can drain and stop — once the home queue is closed and
+/// empty.
 #[allow(clippy::too_many_arguments)]
 fn refill_loop(
     worker_id: u32,
-    queue: &TaskQueue<TaskDesc>,
+    queues: &[Arc<TaskQueue<TaskDesc>>],
+    home: usize,
+    steal: bool,
+    steals: &StealCounters,
     buffer: &TaskBuffer<TaskDesc>,
     slots: usize,
     bulk_size: usize,
@@ -526,7 +668,7 @@ fn refill_loop(
         if !buffer.wait_refill(slots, bulk_size, cancel) {
             break; // buffer closed (executors lost their consumer)
         }
-        match queue.pull_bulk() {
+        match next_bulk(queues, home, steal, steals) {
             Some(tasks) => {
                 if let Err(rejected) = buffer.push_many(tasks) {
                     // Buffer closed underneath us (teardown): conservation
@@ -541,23 +683,29 @@ fn refill_loop(
     buffer.close();
 }
 
-/// Push dispatch (ablation): the coordinator side assigns each bulk to a
-/// worker chosen by the policy, using buffered task counts as the load
-/// signal.  Round-robin ignores the load (and shows head-of-line
-/// blocking under long tails — the point of the ablation); least-loaded
-/// tracks it.
+/// Push dispatch (ablation): the shard's dispatcher thread assigns each
+/// bulk to one of its workers chosen by the policy, using buffered task
+/// counts as the load signal.  Round-robin ignores the load (and shows
+/// head-of-line blocking under long tails — the point of the ablation);
+/// least-loaded tracks it.  Bulks come from the same [`next_bulk`] path
+/// as pull-based refill, so push shards steal too.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_loop(
-    queue: &TaskQueue<TaskDesc>,
+    queues: &[Arc<TaskQueue<TaskDesc>>],
+    home: usize,
+    steal: bool,
+    steals: &StealCounters,
     buffers: &[Arc<TaskBuffer<TaskDesc>>],
+    worker_base: u32,
     mut dispatcher: Dispatcher,
     results: &Sender<Vec<TaskResult>>,
     t0: Instant,
 ) {
-    while let Some(tasks) = queue.pull_bulk() {
+    while let Some(tasks) = next_bulk(queues, home, steal, steals) {
         let buffered: Vec<u64> = buffers.iter().map(|b| b.len() as u64).collect();
         let w = dispatcher.choose(&buffered);
         if let Err(rejected) = buffers[w].push_many(tasks) {
-            cancel_all(rejected, w as u32, results, t0);
+            cancel_all(rejected, worker_base + w as u32, results, t0);
         }
     }
     for b in buffers {
@@ -951,6 +1099,81 @@ mod tests {
             uids.sort_unstable();
             assert_eq!(uids, (0..96).collect::<Vec<u64>>(), "policy {policy}");
         }
+    }
+
+    #[test]
+    fn thief_drains_sibling_queue() {
+        // A one-worker shard whose home queue stays empty (and open)
+        // while every bulk sits in a sibling queue no worker owns: the
+        // refill loop must raid the sibling, execute the stolen tasks
+        // under its own (offset) worker id, and count the steals.
+        let q0 = Arc::new(TaskQueue::new(QueueImpl::Ring, 8));
+        let q1 = Arc::new(TaskQueue::new(QueueImpl::Ring, 8));
+        let (tx, rx) = channel();
+        let cfg = pool_cfg(1, 2, 0.0, Policy::PullBased);
+        assert!(cfg.steal, "stealing is on by default");
+        let steals = Arc::new(StealCounters::new());
+        let pool = WorkerPool::spawn_shard(
+            &cfg,
+            0,
+            1,
+            5,
+            Arc::new(vec![q0.clone(), q1.clone()]),
+            tx,
+            Instant::now(),
+            steals.clone(),
+        );
+        for b in 0..3u64 {
+            let bulk: Vec<TaskDesc> = (0..16)
+                .map(|i| TaskDesc::function(b * 16 + i, call((b * 16 + i) * 8, 8)))
+                .collect();
+            q1.push_bulk(bulk).unwrap();
+        }
+        let got = recv_n(&rx, 48);
+        assert!(got.iter().all(|r| r.state == TaskState::Done));
+        assert!(got.iter().all(|r| r.worker == 5), "global worker id");
+        q0.close();
+        q1.close();
+        pool.join();
+        let (bulks, tasks) = steals.snapshot();
+        assert_eq!(bulks, 3, "every bulk arrived by theft");
+        assert_eq!(tasks, 48);
+        assert_eq!(q1.counts(), (48, 48), "victim queue drained by the thief");
+        assert_eq!(q0.counts(), (0, 0));
+    }
+
+    #[test]
+    fn steal_off_leaves_sibling_backlog() {
+        // Same topology, stealing disabled: the worker must NOT touch the
+        // sibling queue.  Its home closes empty, so the pool unwinds with
+        // the sibling backlog intact.
+        let q0 = Arc::new(TaskQueue::new(QueueImpl::Ring, 8));
+        let q1 = Arc::new(TaskQueue::new(QueueImpl::Ring, 8));
+        let (tx, rx) = channel();
+        let cfg = RaptorConfig {
+            steal: false,
+            ..pool_cfg(1, 2, 0.0, Policy::PullBased)
+        };
+        let steals = Arc::new(StealCounters::new());
+        let pool = WorkerPool::spawn_shard(
+            &cfg,
+            0,
+            1,
+            0,
+            Arc::new(vec![q0.clone(), q1.clone()]),
+            tx,
+            Instant::now(),
+            steals.clone(),
+        );
+        q1.push_bulk((0..4).map(|i| TaskDesc::function(i, call(i * 8, 8))).collect())
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        q0.close();
+        q1.close();
+        pool.join();
+        assert!(rx.try_recv().is_err(), "no task may run without a steal");
+        assert_eq!(steals.snapshot(), (0, 0));
+        assert_eq!(q1.counts(), (4, 0), "backlog untouched with stealing off");
     }
 
     #[test]

@@ -16,7 +16,7 @@ use raptor::workload::{DockTimeModel, LigandLibrary};
 
 const VALUE_KEYS: &[&str] = &[
     "id", "scale", "out", "tasks", "workers", "slots", "seed", "bundle", "executors", "policy",
-    "bulk", "queue",
+    "bulk", "queue", "coordinators",
 ];
 
 fn main() {
@@ -49,7 +49,7 @@ USAGE:
   raptor table1 [--scale S] [--out DIR]       regenerate all Table-I rows
   raptor dock [--tasks N] [--workers W] [--executors E]
               [--policy pull|rr|least] [--bulk B] [--queue ring|condvar]
-                                              real docking via PJRT workers
+              [--coordinators N] [--no-steal]  real docking via PJRT workers
   raptor baseline [--tasks N] [--slots S]     baselines: RP-only, static, pull
   raptor info                                 platform presets + artifacts";
 
@@ -128,9 +128,13 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
     let bulk: usize = args.get_parse("bulk", 64)?;
     let policy = Policy::parse(args.get("policy").unwrap_or("pull"))?;
     let queue_impl = QueueImpl::parse(args.get("queue").unwrap_or("ring"))?;
+    let coordinators: u32 = args.get_parse("coordinators", 1)?;
+    let steal = !args.flag("no-steal");
     let lib = LigandLibrary::tiny(n_tasks * bundle as u64);
     println!(
-        "real-mode docking: {n_tasks} calls x {bundle} ligands on {workers} workers x {executors} executors ({policy} dispatch, bulk {bulk}, {queue_impl} queue)"
+        "real-mode docking: {n_tasks} calls x {bundle} ligands on {workers} workers x {executors} executors \
+         ({policy} dispatch, bulk {bulk}, {queue_impl} queue, {coordinators} coordinator shard(s), steal {})",
+        if steal { "on" } else { "off" }
     );
     let cfg = RaptorConfig {
         n_workers: workers,
@@ -139,6 +143,8 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
         bulk_size: bulk,
         dispatch: policy,
         queue_impl,
+        n_coordinators: coordinators,
+        steal,
         ..Default::default()
     };
     let mut c = Coordinator::new(cfg)?;
@@ -158,6 +164,25 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
         report.utilization.avg * 100.0,
         report.utilization.steady * 100.0
     );
+    if report.shards.len() > 1 {
+        println!(
+            "steals: {} bulks / {} tasks",
+            report.steal_bulks, report.steal_tasks
+        );
+        for s in &report.shards {
+            println!(
+                "  shard {} ({} workers): done={} failed={} canceled={} queue {}→{} stolen-by={} tasks",
+                s.shard,
+                s.workers,
+                s.done,
+                s.failed,
+                s.canceled,
+                s.queue_pushed,
+                s.queue_pulled,
+                s.steal_tasks
+            );
+        }
+    }
     Ok(())
 }
 

@@ -239,10 +239,23 @@ impl BenchReport {
     /// Record one measurement: a config description (free-form key/value
     /// pairs, e.g. impl/producers/consumers/bulk) and its throughput.
     pub fn push(&mut self, config: Vec<(&str, Json)>, tasks_per_s: f64) {
-        self.entries.push(obj(vec![
+        self.push_entry(config, tasks_per_s, vec![]);
+    }
+
+    /// Like [`push`](Self::push), plus extra top-level measurement fields
+    /// alongside `tasks_per_s` (e.g. steal counters, per-shard rates).
+    pub fn push_entry(
+        &mut self,
+        config: Vec<(&str, Json)>,
+        tasks_per_s: f64,
+        extras: Vec<(&str, Json)>,
+    ) {
+        let mut fields = vec![
             ("config", obj(config)),
             ("tasks_per_s", Json::Num(tasks_per_s)),
-        ]));
+        ];
+        fields.extend(extras);
+        self.entries.push(obj(fields));
     }
 
     pub fn to_json(&self) -> Json {
@@ -343,6 +356,24 @@ mod tests {
             entries[0].get("config").unwrap().get("impl").unwrap().as_str(),
             Some("ring")
         );
+    }
+
+    #[test]
+    fn bench_report_extras() {
+        let mut rep = BenchReport::new("bench_scheduler");
+        rep.push_entry(
+            vec![("coordinators", Json::Num(4.0))],
+            2.0e6,
+            vec![
+                ("steal_bulks", Json::Num(17.0)),
+                ("steal_tasks", Json::Num(1088.0)),
+            ],
+        );
+        let parsed = crate::util::json::parse(&rep.to_json().to_string()).unwrap();
+        let entries = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries[0].num_field("tasks_per_s").unwrap(), 2.0e6);
+        assert_eq!(entries[0].num_field("steal_bulks").unwrap(), 17.0);
+        assert_eq!(entries[0].num_field("steal_tasks").unwrap(), 1088.0);
     }
 
     #[test]

@@ -66,6 +66,30 @@ impl Args {
                 .map_err(|e| anyhow::anyhow!("bad value for --{name}: {e}")),
         }
     }
+
+    /// Parse a comma-separated list value (`--coordinators 1,2,4,8`).
+    /// Absent option → `default`; empty segments are rejected.
+    pub fn get_list_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> anyhow::Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad value for --{name}: {e}"))
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +126,20 @@ mod tests {
     fn bad_parse_errors() {
         let a = parse("--scale abc");
         assert!(a.get_parse::<f64>("scale", 1.0).is_err());
+    }
+
+    #[test]
+    fn list_values_parse() {
+        let a = Args::parse(
+            vec!["--id".to_string(), "1,2, 8".to_string()],
+            &["id"],
+        )
+        .unwrap();
+        assert_eq!(a.get_list_parse::<u32>("id", &[4]).unwrap(), vec![1, 2, 8]);
+        // Absent: default.
+        assert_eq!(a.get_list_parse::<u32>("other", &[4]).unwrap(), vec![4]);
+        // Malformed segment: error.
+        let a = Args::parse(vec!["--id".to_string(), "1,,2".to_string()], &["id"]).unwrap();
+        assert!(a.get_list_parse::<u32>("id", &[]).is_err());
     }
 }

@@ -334,6 +334,136 @@ fn long_tail_does_not_starve_bulk_siblings() {
     );
 }
 
+/// Sharded real mode (`--coordinators 4`): a clean join completes every
+/// task with exact per-shard accounting — four shard reports, done
+/// breakdown summing to the total, and every shard queue drained.
+#[test]
+fn four_coordinator_join_accounts_exactly() {
+    let cfg = RaptorConfig {
+        n_workers: 4,
+        n_coordinators: 4,
+        executors_per_worker: 2,
+        bulk_size: 16,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 0.0,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let n = 640u64;
+    c.submit((0..n).map(dock_task)).unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, n);
+    assert_eq!(report.failed + report.canceled, 0);
+    assert_eq!(report.shards.len(), 4);
+    let shard_done: u64 = report.shards.iter().map(|s| s.done).sum();
+    assert_eq!(shard_done, n, "per-shard breakdown must sum to the total");
+    for s in &report.shards {
+        assert_eq!(s.workers, 1);
+        assert_eq!(s.queue_pushed, s.queue_pulled, "shard {} not drained", s.shard);
+    }
+    let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+    uids.sort_unstable();
+    assert_eq!(uids, (0..n).collect::<Vec<u64>>());
+}
+
+/// Sharded real mode: stop() mid-run tears down all four shards without
+/// losing or duplicating a task — conservation summed across shards.
+#[test]
+fn four_coordinator_stop_conserves_tasks() {
+    let cfg = RaptorConfig {
+        n_workers: 4,
+        n_coordinators: 4,
+        executors_per_worker: 1,
+        bulk_size: 8,
+        queue_capacity: 4,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 1.0,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let n = 400u64;
+    c.submit((0..n).map(|i| {
+        TaskDesc::executable(
+            i,
+            ExecCall {
+                command: vec![],
+                sim_duration: 0.01,
+            },
+        )
+    }))
+    .unwrap();
+    c.start().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let report = c.stop().unwrap();
+    assert_eq!(report.done + report.failed + report.canceled, n);
+    let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+    uids.sort_unstable();
+    uids.dedup();
+    assert_eq!(uids.len() as u64, n, "exactly one terminal result per task");
+    for s in &report.shards {
+        assert_eq!(s.queue_pushed, s.queue_pulled, "shard {} not drained", s.shard);
+    }
+}
+
+/// Work stealing on a pathologically skewed 2-shard workload: every bulk
+/// strided to shard 0 is sleepers, so shard 1's workers run dry and must
+/// raid shard 0's queue.  With stealing on, steals are observed and the
+/// run still accounts exactly; with `--no-steal`, the same workload
+/// completes with zero steals.
+#[test]
+fn skewed_shards_steal_only_when_enabled() {
+    for steal in [true, false] {
+        let bulk = 8u64;
+        let cfg = RaptorConfig {
+            n_workers: 2,
+            n_coordinators: 2,
+            steal,
+            executors_per_worker: 1,
+            bulk_size: bulk as usize,
+            queue_capacity: 8,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg).unwrap();
+        let n = 400u64;
+        c.submit((0..n).map(|i| {
+            if (i / bulk) % 2 == 0 {
+                TaskDesc::executable(
+                    i,
+                    ExecCall {
+                        command: vec![],
+                        sim_duration: 0.004,
+                    },
+                )
+            } else {
+                dock_task(i)
+            }
+        }))
+        .unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, n, "steal={steal}");
+        if steal {
+            assert!(
+                report.steal_bulks > 0,
+                "skewed workload must provoke steals when enabled"
+            );
+            let thief_tasks: u64 = report.shards.iter().map(|s| s.steal_tasks).sum();
+            assert_eq!(thief_tasks, report.steal_tasks);
+        } else {
+            assert_eq!(report.steal_bulks, 0, "no steals when disabled");
+            assert_eq!(report.steal_tasks, 0);
+        }
+        for s in &report.shards {
+            assert_eq!(s.queue_pushed, s.queue_pulled, "shard {} not drained", s.shard);
+        }
+    }
+}
+
 /// Regression for the retry-resubmission stall: a burst of failures
 /// against a minimal-capacity queue must not wedge the result collector
 /// (the seed pushed one blocking single-task bulk per failure from the

@@ -178,6 +178,7 @@ fn prop_task_conservation_under_interleavings() {
             exec_time_scale: 1.0,
             keep_results: true,
             max_retries: rng.next_below(3) as u32,
+            ..Default::default()
         };
         let n_before = rng.next_below(120);
         let n_after = rng.next_below(120);
@@ -219,6 +220,102 @@ fn prop_task_conservation_under_interleavings() {
         }
         let (pushed, pulled) = c.queue_counts();
         assert_eq!(pushed, pulled, "queue not drained after teardown");
+    });
+}
+
+/// Sharded conservation invariant under work stealing: for randomized
+/// shard counts (2..=4), worker splits, bulk/queue sizes, steal on/off
+/// and clean-join vs stop interleavings — with shard 0's stride made
+/// *pathologically skewed* (every bulk the feeder strides to shard 0 is
+/// sleepers, so siblings run dry and must steal to stay busy) — exactly
+/// `done + failed + canceled == submitted` terminal results are
+/// reported, each uid exactly once (a stolen bulk moves, it does not
+/// duplicate), every shard queue drains what it accepted, and the steal
+/// totals agree with the per-shard thief counters.
+#[test]
+fn prop_sharded_conservation_under_skewed_steals() {
+    prop(8, 10, |rng| {
+        let shards = 2 + rng.next_below(3) as u32; // 2..=4
+        let per_shard = 1 + rng.next_below(2) as u32;
+        let bulk = 2 + rng.next_below(14) as usize;
+        let steal = rng.next_below(2) == 1;
+        let do_stop = rng.next_below(2) == 1;
+        let queue_impl = if rng.next_below(2) == 0 {
+            QueueImpl::Condvar
+        } else {
+            QueueImpl::Ring
+        };
+        let cfg = RaptorConfig {
+            n_workers: shards * per_shard,
+            n_coordinators: shards,
+            steal,
+            executors_per_worker: 1 + rng.next_below(2) as u32,
+            bulk_size: bulk,
+            queue_capacity: 1 + rng.next_below(8) as usize,
+            queue_impl,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            keep_results: true,
+            max_retries: rng.next_below(2) as u32,
+            ..Default::default()
+        };
+        let total = 100 + rng.next_below(300);
+
+        let mut c = Coordinator::new(cfg).unwrap();
+        let mut tasks = Vec::new();
+        for i in 0..total {
+            // Skew: every bulk strided to shard 0 is all sleepers; the
+            // other shards' strides get the usual random mix.
+            if (i / bulk as u64) % shards as u64 == 0 {
+                tasks.push(TaskDesc::executable(
+                    i,
+                    ExecCall {
+                        command: vec![],
+                        sim_duration: rng.uniform(0.001, 0.005),
+                    },
+                ));
+            } else {
+                tasks.push(random_task(i, rng));
+            }
+        }
+        c.submit(tasks).unwrap();
+        c.start().unwrap();
+        let report = if do_stop {
+            std::thread::sleep(std::time::Duration::from_millis(rng.next_below(30)));
+            c.stop().unwrap()
+        } else {
+            c.join().unwrap()
+        };
+
+        assert_eq!(
+            report.done + report.failed + report.canceled,
+            total,
+            "conservation violated (shards={shards}, steal={steal}, stop={do_stop})"
+        );
+        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(uids.len() as u64, total, "result count != submitted");
+        uids.dedup();
+        assert_eq!(
+            uids.len() as u64,
+            total,
+            "a steal duplicated a task (shards={shards}, steal={steal})"
+        );
+        assert_eq!(report.shards.len(), shards as usize);
+        let shard_done: u64 = report.shards.iter().map(|s| s.done).sum();
+        assert_eq!(shard_done, report.done, "per-shard done breakdown drifted");
+        for s in &report.shards {
+            assert_eq!(
+                s.queue_pushed, s.queue_pulled,
+                "shard {} queue not drained after teardown",
+                s.shard
+            );
+        }
+        let steal_tasks: u64 = report.shards.iter().map(|s| s.steal_tasks).sum();
+        assert_eq!(steal_tasks, report.steal_tasks, "steal totals drifted");
+        if !steal {
+            assert_eq!(report.steal_bulks, 0, "steal-off run must not steal");
+        }
     });
 }
 
