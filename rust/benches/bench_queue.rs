@@ -122,7 +122,7 @@ fn main() -> anyhow::Result<()> {
         for (i, which) in [QueueImpl::Condvar, QueueImpl::Ring].into_iter().enumerate() {
             let rate = bench_queue_mpmc(which, producers, consumers, bulk, total);
             rates[i] = rate;
-            report.push(
+            report.push_entry(
                 vec![
                     ("impl", Json::Str(which.name().into())),
                     ("producers", Json::Num(producers as f64)),
@@ -131,6 +131,7 @@ fn main() -> anyhow::Result<()> {
                     ("capacity_bulks", Json::Num(64.0)),
                 ],
                 rate,
+                vec![("tasks_moved", Json::Num(total as f64))],
             );
             println!(
                 "  bulk {bulk:>5} {:>8}: {rate:>12.0} tasks/s  ({:.3} us/task)",
@@ -151,13 +152,14 @@ fn main() -> anyhow::Result<()> {
     let buf_bulks: &[usize] = if smoke { &[128] } else { &[8, 32, 128, 512] };
     for &bulk in buf_bulks {
         let rate = bench_task_buffer(bulk, 4, total / 2);
-        report.push(
+        report.push_entry(
             vec![
                 ("impl", Json::Str("task_buffer_segmented".into())),
                 ("slots", Json::Num(4.0)),
                 ("bulk", Json::Num(bulk as f64)),
             ],
             rate,
+            vec![("tasks_moved", Json::Num((total / 2) as f64))],
         );
         println!(
             "  refill bulk {bulk:>4}: {rate:>12.0} tasks/s  ({:.3} us/task)",

@@ -40,11 +40,11 @@ use raptor::coordinator::worker::synthetic_scores;
 use raptor::coordinator::{
     BulkQueue, Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig, RunReport,
 };
-use raptor::metrics::BenchReport;
+use raptor::metrics::{BenchReport, TraceConfig, TraceKind};
 use raptor::pilot::GlobalSchedulerModel;
 use raptor::task::{DockCall, ExecCall, TaskDesc, TaskKind};
 use raptor::util::cli::Args;
-use raptor::util::json::Json;
+use raptor::util::json::{parse, Json};
 use raptor::util::rng::SplitMix64;
 use raptor::workload::DockTimeModel;
 
@@ -163,6 +163,7 @@ fn sharded_run(
     coordinators: u32,
     workers: u32,
     steal: bool,
+    trace: bool,
     tasks: Vec<TaskDesc>,
 ) -> (f64, RunReport) {
     let n = tasks.len() as u64;
@@ -174,6 +175,10 @@ fn sharded_run(
         exec_time_scale: 1.0,
         n_coordinators: coordinators,
         steal,
+        trace: TraceConfig {
+            enabled: trace,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let mut c = Coordinator::new(cfg).unwrap();
@@ -274,7 +279,7 @@ fn serial_bulk_baseline(tasks: Vec<TaskDesc>) -> (f64, f64) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["out", "coordinators"])?;
+    let args = Args::from_env(&["out", "coordinators", "trace"])?;
     let smoke = args.flag("smoke");
     let out = args.get("out").unwrap_or("BENCH_scheduler.json").to_string();
     let mut report = BenchReport::new(if smoke {
@@ -368,7 +373,7 @@ fn main() -> anyhow::Result<()> {
     for &n_c in &sweep {
         let workers = 2 * n_c;
         let n = mixed_tasks * n_c as u64;
-        let (rate, r) = sharded_run(n_c, workers, true, mixed_longtail_tasks(n, 7));
+        let (rate, r) = sharded_run(n_c, workers, true, false, mixed_longtail_tasks(n, 7));
         report.push_entry(
             vec![
                 ("bench", Json::Str("coordinator_sweep".into())),
@@ -382,6 +387,7 @@ fn main() -> anyhow::Result<()> {
             vec![
                 ("steal_bulks", Json::Num(r.steal_bulks as f64)),
                 ("steal_tasks", Json::Num(r.steal_tasks as f64)),
+                ("retry_flush_stalls", Json::Num(r.retry_flush_stalls as f64)),
             ],
         );
         println!(
@@ -393,7 +399,8 @@ fn main() -> anyhow::Result<()> {
     println!("\n== work-stealing ablation (skewed 2-shard workload: shard 0's stride is all sleepers) ==");
     let skew_n: u64 = if smoke { 512 } else { 2_048 };
     for steal in [true, false] {
-        let (rate, r) = sharded_run(2, 2, steal, skewed_tasks(skew_n, 2, SWEEP_BULK as u64, 0.002));
+        let (rate, r) =
+            sharded_run(2, 2, steal, false, skewed_tasks(skew_n, 2, SWEEP_BULK as u64, 0.002));
         if steal {
             assert!(
                 r.steal_bulks > 0,
@@ -414,6 +421,7 @@ fn main() -> anyhow::Result<()> {
             vec![
                 ("steal_bulks", Json::Num(r.steal_bulks as f64)),
                 ("steal_tasks", Json::Num(r.steal_tasks as f64)),
+                ("retry_flush_stalls", Json::Num(r.retry_flush_stalls as f64)),
             ],
         );
         println!(
@@ -421,6 +429,71 @@ fn main() -> anyhow::Result<()> {
             if steal { "on" } else { "off" },
             r.steal_bulks,
             r.steal_tasks
+        );
+    }
+
+    // Traced run (`--trace PATH`): 2-coordinator mixed workload with the
+    // lifecycle tracer on.  Self-validating — every JSONL line must
+    // parse, and the event stream must reconstruct conservation exactly
+    // — then the stage means land in the perf trajectory as extras.
+    if let Some(trace_path) = args.get("trace") {
+        println!("\n== traced run (2 coordinators, lifecycle tracing on) ==");
+        let n = mixed_tasks * 2;
+        let (rate, r) = sharded_run(2, 4, true, true, mixed_longtail_tasks(n, 13));
+        let ta = r.trace.as_ref().expect("tracing was enabled");
+        let mut lanes = [0u64; 3];
+        for e in &r.trace_events {
+            if e.kind == TraceKind::Collected {
+                lanes[(e.arg as usize).min(2)] += 1;
+            }
+        }
+        assert_eq!(
+            lanes[0] + lanes[1] + lanes[2],
+            ta.count(TraceKind::Submitted),
+            "trace stream must reconstruct done+failed+canceled == submitted"
+        );
+        assert_eq!(ta.count(TraceKind::Submitted), n, "every task submitted");
+        assert_eq!(lanes[0], r.done, "collected done lane == report.done");
+        assert_eq!(
+            ta.count(TraceKind::ExecDone),
+            r.done,
+            "exec_done events == report.done"
+        );
+        let jsonl = raptor::metrics::trace::to_jsonl(&r.trace_events);
+        for line in jsonl.lines() {
+            parse(line).expect("every trace JSONL line parses");
+        }
+        raptor::util::write_file(trace_path, &jsonl)?;
+        let chrome_path = format!("{trace_path}.chrome.json");
+        raptor::metrics::trace::write_chrome_trace(&chrome_path, &r.trace_events)?;
+        parse(&raptor::metrics::trace::to_chrome_trace(&r.trace_events))
+            .expect("chrome trace parses");
+        let mut extras = vec![
+            ("steal_bulks", Json::Num(r.steal_bulks as f64)),
+            ("retry_flush_stalls", Json::Num(r.retry_flush_stalls as f64)),
+        ];
+        for (k, v) in ta.stages.means() {
+            extras.push((k, Json::Num(v)));
+        }
+        report.push_entry(
+            vec![
+                ("bench", Json::Str("trace_smoke".into())),
+                ("coordinators", Json::Num(2.0)),
+                ("tasks", Json::Num(n as f64)),
+            ],
+            rate,
+            extras,
+        );
+        println!(
+            "  {rate:>8.0} tasks/s traced; {} events balance -> {trace_path} + {chrome_path}",
+            r.trace_events.len()
+        );
+        println!(
+            "  stage means: queue {:.2} ms | buffer {:.2} ms | exec {:.2} ms | collect lag {:.2} ms",
+            ta.stages.queue_wait_s.mean() * 1e3,
+            ta.stages.buffer_wait_s.mean() * 1e3,
+            ta.stages.exec_s.mean() * 1e3,
+            ta.stages.collect_lag_s.mean() * 1e3
         );
     }
 

@@ -5,6 +5,7 @@
 use super::dispatch::{Policy, DEFAULT_BULK};
 use super::partition::Partition;
 use super::queue::QueueImpl;
+use crate::metrics::trace::TraceConfig;
 
 /// What a worker's executor slots run for *function* tasks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,10 +64,19 @@ pub struct RaptorConfig {
     pub exec_time_scale: f64,
     /// Retain every TaskResult in the report (memory-heavy; tests only).
     pub keep_results: bool,
+    /// Retain the full per-task `Timeline` in the report.  Off by
+    /// default: at paper-scale task counts the per-task records dominate
+    /// memory, so lifecycle accounting streams through windowed
+    /// `StreamMetrics` instead (`RunReport::stream`).
+    pub keep_timeline: bool,
     /// Failure-management policy (paper §VI future work, implemented
     /// here): failed tasks are resubmitted up to this many times before
     /// being reported Failed.
     pub max_retries: u32,
+    /// Task-lifecycle tracing (`--trace out.jsonl`).  Off by default;
+    /// the disabled record path is a single relaxed atomic load, so the
+    /// dispatch hot paths are untouched.
+    pub trace: TraceConfig,
 }
 
 impl Default for RaptorConfig {
@@ -83,7 +93,9 @@ impl Default for RaptorConfig {
             engine: EngineKind::Synthetic,
             exec_time_scale: 1.0,
             keep_results: false,
+            keep_timeline: false,
             max_retries: 0,
+            trace: TraceConfig::default(),
         }
     }
 }

@@ -15,7 +15,7 @@
 //! machinery; with `n_coordinators == 1` the pipeline is exactly the
 //! pre-sharding single-queue hot path (no steal probes, blocking pulls).
 
-use crate::metrics::{Timeline, Utilization};
+use crate::metrics::{StreamMetrics, Timeline, TraceAnalysis, TraceEvent, Utilization};
 use crate::task::{TaskDesc, TaskResult};
 
 use super::config::RaptorConfig;
@@ -35,8 +35,12 @@ pub struct RunReport {
     pub wall_s: f64,
     /// Time from `start` to the first task starting (Table I "1st Task").
     pub first_task_s: f64,
-    /// Task timeline (per-task records).
-    pub timeline: Timeline,
+    /// Windowed lifecycle metrics (always on; O(windows) memory).  The
+    /// utilization and rate figures below derive from this.
+    pub stream: StreamMetrics,
+    /// Full per-task timeline — `Some` only under `cfg.keep_timeline`
+    /// (memory-heavy at paper-scale task counts).
+    pub timeline: Option<Timeline>,
     /// Utilization vs the configured capacity.
     pub utilization: Utilization,
     /// Completed-task throughput (tasks/s over the whole run).
@@ -51,6 +55,12 @@ pub struct RunReport {
     pub steal_tasks: u64,
     /// Per-shard breakdown (one entry per coordinator shard).
     pub shards: Vec<ShardReport>,
+    /// Post-run trace analysis (per-stage waits, per-shard utilization,
+    /// steady-state exec rate) — `Some` only when `cfg.trace.enabled`.
+    pub trace: Option<TraceAnalysis>,
+    /// Raw trace events, timestamp-sorted — empty unless tracing was on.
+    /// Feed to `metrics::trace::write_jsonl` / `write_chrome_trace`.
+    pub trace_events: Vec<TraceEvent>,
     /// Retained results (when `cfg.keep_results`).
     pub results: Vec<TaskResult>,
 }
@@ -107,6 +117,13 @@ impl Coordinator {
     /// Per-shard (pushed, pulled) queue counts.
     pub fn shard_queue_counts(&self) -> Vec<(u64, u64)> {
         self.inner.shard_queue_counts()
+    }
+
+    /// The run's trace sink.  Cheap to clone; `LiveSnapshot`s read from
+    /// it power progress tickers while the run is in flight.  Disabled
+    /// (all-zero snapshots) unless `cfg.trace.enabled`.
+    pub fn tracer(&self) -> std::sync::Arc<crate::metrics::TraceSink> {
+        self.inner.tracer()
     }
 }
 

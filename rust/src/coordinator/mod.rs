@@ -163,6 +163,54 @@
 //! pathologically skewed shard workloads (steals on and off) — against
 //! **both** queue implementations.
 //!
+//! # Task-lifecycle event model (tracing)
+//!
+//! With [`config::RaptorConfig::trace`] enabled (`dock --trace`), every
+//! hop above emits a fixed-size [`crate::metrics::TraceEvent`] into a
+//! thread-local buffer ([`crate::metrics::TraceScope`]) flushed in bulks
+//! to a shared sink — the same batching idiom as the task pipeline, so
+//! observing the hot path costs per-*flush* synchronization, not
+//! per-event.  Disabled (the default), the whole machinery is one
+//! relaxed load per hop and zero allocation.  The kinds, in stage order:
+//!
+//! ```text
+//!  Submitted ─▶ Enqueued ─▶ Pulled ─▶ Buffered ─▶ ExecStart ─▶ ExecDone
+//!  (feeder      (routed     (left a    (worker     (slot        (Done
+//!   recv)        to shard    shard      TaskBuffer  claimed      only)
+//!                 queue)     queue)     deposit)    the task)
+//!                                                        └─▶ Collected
+//!                                                            (terminal,
+//!                                                             arg = lane)
+//! ```
+//!
+//! plus three off-path kinds: `Steal` / `Refill` (bulk transport),
+//! `RetryFlushStall` (collector back-off), and `QueueDepth` — a
+//! *sampled* gauge of `backlog_bulks`, recorded every N-th refill
+//! ([`crate::metrics::TraceConfig::depth_sample`]).
+//!
+//! The contract the tests lean on:
+//!
+//! * **Lifecycle kinds are exact, the gauge is approximate.**  Every
+//!   task gets exactly one `Submitted` (at feeder recv — including tasks
+//!   a closed queue later refuses) and exactly one `Collected` whose
+//!   `arg` is the terminal lane (done/failed/canceled), even across
+//!   retries; `ExecDone` is recorded only for `Done` executions, so
+//!   `count(ExecDone) == RunReport::done`.  `QueueDepth` is a racy
+//!   snapshot — ordering/conservation claims never rest on it.
+//! * **Program order holds per thread only.**  Events from one thread
+//!   are in emission order; cross-thread order is reconstructed from
+//!   `t_ns` timestamps alone (all scopes share one `Instant` epoch).
+//!   Stage latencies in [`crate::metrics::TraceAnalysis`] are therefore
+//!   per-uid timestamp deltas, robust to inter-thread interleaving.
+//! * **Drain-after-join is complete.**  Scopes flush on drop; the
+//!   sharded engine drains the sink only after the feeder, every pool
+//!   thread, and the collector scope have gone, so the stream in
+//!   [`coordinator::RunReport::trace_events`] is the whole run.
+//!
+//! `tests/prop_invariants.rs` re-derives the conservation invariant from
+//! the raw stream; exporters (`JSONL` + Chrome trace-event JSON for
+//! Perfetto) live in [`crate::metrics::trace`].
+//!
 //! # Modules
 //!
 //! * [`coordinator::Coordinator`] — the paper's `submit` / `start` /

@@ -132,6 +132,11 @@ impl<T> TaskQueue<T> {
         }
     }
 
+    /// Bulks currently queued — the load signal behind steal victim
+    /// selection, least-backlogged retry flushing, and the sampled
+    /// `QueueDepth` trace gauge.  Approximate under concurrency (exact
+    /// at quiescence): consumers may race the read, so treat it as a
+    /// hint, never as a conservation count.
     pub fn backlog_bulks(&self) -> usize {
         match self {
             Self::Condvar(q) => q.backlog_bulks(),

@@ -391,7 +391,10 @@ impl<T> RingQueue<T> {
     }
 
     /// Bulks currently buffered (claimed-not-yet-pulled; approximate
-    /// under concurrency, exact at quiescence).
+    /// under concurrency, exact at quiescence).  Two SeqCst loads with
+    /// no claim — safe to call from thieves sizing up a victim and from
+    /// the tracer's sampled `QueueDepth` gauge without perturbing the
+    /// producers/consumers it is observing.
     pub fn backlog_bulks(&self) -> usize {
         let enq = self.enqueue_pos.load(Ordering::SeqCst) & !CLOSED_BIT;
         let deq = self.dequeue_pos.load(Ordering::SeqCst);

@@ -48,7 +48,10 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::metrics::{utilization, Timeline};
+use crate::metrics::trace::NO_SHARD;
+use crate::metrics::{
+    analyze, StreamMetrics, TaskClass, Timeline, TraceKind, TraceScope, TraceSink,
+};
 use crate::task::{TaskDesc, TaskResult, TaskState, NO_WORKER};
 
 use super::config::RaptorConfig;
@@ -118,6 +121,7 @@ pub struct ShardedCoordinator {
     steals: Vec<Arc<StealCounters>>,
     feeder: Option<std::thread::JoinHandle<()>>,
     callback: Option<ResultCallback>,
+    tracer: Arc<TraceSink>,
     phase: Phase,
     t0: Instant,
 }
@@ -131,6 +135,10 @@ impl ShardedCoordinator {
         let queues = (0..partition.n_coordinators())
             .map(|_| Arc::new(TaskQueue::new(cfg.queue_impl, cfg.queue_capacity)))
             .collect();
+        let tracer = Arc::new(TraceSink::new(
+            &cfg.trace,
+            partition.n_coordinators() as usize,
+        ));
         Ok(Self {
             cfg,
             partition,
@@ -144,6 +152,7 @@ impl ShardedCoordinator {
             steals: Vec::new(),
             feeder: None,
             callback: None,
+            tracer,
             phase: Phase::Created,
             t0: Instant::now(),
         })
@@ -151,6 +160,13 @@ impl ShardedCoordinator {
 
     pub fn n_shards(&self) -> usize {
         self.queues.len()
+    }
+
+    /// The run's trace sink (see [`crate::metrics::trace`]).  Always
+    /// present; a run without `cfg.trace.enabled` holds a disabled sink
+    /// whose snapshots stay all-zero.
+    pub fn tracer(&self) -> Arc<TraceSink> {
+        self.tracer.clone()
     }
 
     /// Register a per-result callback (must precede `join`).
@@ -193,6 +209,7 @@ impl ShardedCoordinator {
                 results_tx.clone(),
                 self.t0,
                 steals.clone(),
+                self.tracer.clone(),
             ));
             self.steals.push(steals);
         }
@@ -215,31 +232,49 @@ impl ShardedCoordinator {
         let queues = self.queues.clone();
         let bulk_size = self.cfg.bulk_size;
         let t0 = self.t0;
+        let tracer = self.tracer.clone();
         self.feeder = Some(std::thread::spawn(move || {
+            let mut tr = tracer.scope(NO_SHARD, NO_WORKER, t0);
             let n_shards = queues.len();
             let mut next_shard = 0usize;
             let mut bulk = Vec::with_capacity(bulk_size);
             // Tasks the queues refused: terminal-Canceled, never dropped.
             let mut dropped: Vec<TaskDesc> = Vec::new();
-            let mut route = |bulk: Vec<TaskDesc>, next_shard: &mut usize| {
-                let q = &queues[*next_shard];
-                *next_shard = (*next_shard + 1) % n_shards;
-                q.push_bulk(bulk)
-            };
+            // Routes one bulk to the striding target; on success records
+            // Enqueued per task against the shard that accepted it (the
+            // uid snapshot is taken only when tracing is live — the
+            // disabled path allocates nothing).
+            let mut route =
+                |bulk: Vec<TaskDesc>, next_shard: &mut usize, tr: &mut TraceScope| {
+                    let target = *next_shard;
+                    *next_shard = (*next_shard + 1) % n_shards;
+                    let uids: Vec<u64> = if tr.on() {
+                        bulk.iter().map(|t| t.uid).collect()
+                    } else {
+                        Vec::new()
+                    };
+                    queues[target].push_bulk(bulk).map(|()| {
+                        for uid in uids {
+                            tr.rec_at(TraceKind::Enqueued, uid, 0, target as u16, NO_WORKER);
+                        }
+                    })
+                };
             while let Ok(task) = rx.recv() {
+                tr.rec(TraceKind::Submitted, task.uid, 0);
                 if !dropped.is_empty() {
                     dropped.push(task);
                     continue;
                 }
                 bulk.push(task);
                 if bulk.len() >= bulk_size {
-                    if let Err(refused) = route(std::mem::take(&mut bulk), &mut next_shard) {
+                    if let Err(refused) = route(std::mem::take(&mut bulk), &mut next_shard, &mut tr)
+                    {
                         dropped = refused;
                     }
                 }
             }
             if dropped.is_empty() && !bulk.is_empty() {
-                if let Err(refused) = route(std::mem::take(&mut bulk), &mut next_shard) {
+                if let Err(refused) = route(std::mem::take(&mut bulk), &mut next_shard, &mut tr) {
                     dropped = refused;
                 }
             }
@@ -281,7 +316,13 @@ impl ShardedCoordinator {
             /// executing worker's id (stolen tasks land on the thief).
             per_shard: Vec<[u64; 3]>,
             first_task: f64,
-            timeline: Timeline,
+            /// Windowed lifecycle accounting (always on, O(windows)).
+            /// Results arrive out of submission order, so occupancy is
+            /// folded via the order-independent `StreamMetrics::span`.
+            stream: StreamMetrics,
+            /// Full per-task records — only under `cfg.keep_timeline`
+            /// (memory grows with the task count).
+            timeline: Option<Timeline>,
             results: Vec<TaskResult>,
             keep: bool,
         }
@@ -291,6 +332,7 @@ impl ShardedCoordinator {
                 r: TaskResult,
                 shard: Option<usize>,
                 callback: &mut Option<ResultCallback>,
+                tr: &mut TraceScope,
             ) -> anyhow::Result<()> {
                 self.received += 1;
                 let lane = match r.state {
@@ -311,8 +353,27 @@ impl ShardedCoordinator {
                 if let Some(s) = shard {
                     self.per_shard[s][lane] += 1;
                 }
+                tr.rec_at(
+                    TraceKind::Collected,
+                    r.uid,
+                    lane as u64,
+                    shard.map_or(NO_SHARD, |s| s as u16),
+                    r.worker,
+                );
                 self.first_task = self.first_task.min(r.started);
-                self.timeline.record(r.started, r.finished, 1.0);
+                // Class split without carrying the task kind through the
+                // result: synthetic/PJRT function tasks always return
+                // scores, executable tasks never do (advisory only — it
+                // feeds the per-class rate split, not conservation).
+                let class = if r.scores.is_empty() {
+                    TaskClass::Executable
+                } else {
+                    TaskClass::Function
+                };
+                self.stream.span(r.started, r.finished, 1.0, class);
+                if let Some(tl) = &mut self.timeline {
+                    tl.record(r.started, r.finished, 1.0);
+                }
                 if let Some(cb) = callback {
                     cb(&r);
                 }
@@ -325,6 +386,13 @@ impl ShardedCoordinator {
 
         let rx = self.results_rx.take().unwrap();
         let expected = || self.submitted.load(Ordering::SeqCst);
+        // The collector's trace scope: Collected / RetryFlushStall events
+        // recorded on this thread (shard NO_SHARD, no worker id).
+        let mut tr = self.tracer.scope(NO_SHARD, NO_WORKER, self.t0);
+        // Window width for the streaming lifecycle metrics: fine enough
+        // to resolve smoke-test runs, coarse enough that hour-long runs
+        // stay at O(10^4) windows.
+        const STREAM_DT: f64 = 0.1;
         let mut acc = Acc {
             received: 0,
             done: 0,
@@ -332,7 +400,8 @@ impl ShardedCoordinator {
             canceled: 0,
             per_shard: vec![[0; 3]; self.n_shards()],
             first_task: f64::INFINITY,
-            timeline: Timeline::new(),
+            stream: StreamMetrics::new(STREAM_DT, 60.0, 60),
+            timeline: self.cfg.keep_timeline.then(Timeline::new),
             results: Vec::new(),
             keep: self.cfg.keep_results,
         };
@@ -385,6 +454,7 @@ impl ShardedCoordinator {
                     Some(tasks) if any_open => {
                         retry_buf = results.into_iter().zip(tasks).collect();
                         retry_flush_stalls += 1;
+                        tr.rec(TraceKind::RetryFlushStall, 0, retry_buf.len() as u64);
                         next_flush = Instant::now() + backoff;
                         backoff = (backoff * 2).min(RETRY_BACKOFF_MAX);
                     }
@@ -394,7 +464,7 @@ impl ShardedCoordinator {
                         backoff = RETRY_BACKOFF_MIN;
                         for r in results {
                             let shard = self.partition.shard_of_worker(r.worker);
-                            acc.terminal(r, shard, &mut self.callback)?;
+                            acc.terminal(r, shard, &mut self.callback, &mut tr)?;
                         }
                     }
                 }
@@ -438,14 +508,14 @@ impl ShardedCoordinator {
                     }
                 }
                 let shard = self.partition.shard_of_worker(r.worker);
-                acc.terminal(r, shard, &mut self.callback)?;
+                acc.terminal(r, shard, &mut self.callback, &mut tr)?;
             }
         }
         // Disconnect fallback: if the channel died with retries still
         // buffered, their stored failures are the terminal outcomes.
         for (r, _) in retry_buf.drain(..) {
             let shard = self.partition.shard_of_worker(r.worker);
-            acc.terminal(r, shard, &mut self.callback)?;
+            acc.terminal(r, shard, &mut self.callback, &mut tr)?;
         }
         // Every task is terminal: release the workers.  All queues close
         // together — a thief observing its home Drained may exit, but by
@@ -460,6 +530,19 @@ impl ShardedCoordinator {
             p.join();
         }
         self.phase = Phase::Finished;
+        // Trace teardown: the feeder and every pool thread have joined
+        // (their scopes flushed on drop), so flushing the collector's own
+        // scope before draining yields the complete event stream.
+        drop(tr);
+        let trace_events = self.tracer.drain();
+        let trace = if self.tracer.enabled() {
+            let shard_capacity: Vec<f64> = (0..self.n_shards())
+                .map(|s| (self.partition.workers[s] * self.cfg.executors_per_worker) as f64)
+                .collect();
+            Some(analyze(&trace_events, &shard_capacity))
+        } else {
+            None
+        };
 
         let shards: Vec<ShardReport> = (0..self.n_shards())
             .map(|s| {
@@ -482,7 +565,9 @@ impl ShardedCoordinator {
         let steal_tasks = shards.iter().map(|s| s.steal_tasks).sum();
 
         let wall_s = self.t0.elapsed().as_secs_f64();
-        let util = utilization(&acc.timeline, self.cfg.capacity() as f64, Some(wall_s));
+        let util = acc
+            .stream
+            .utilization(self.cfg.capacity() as f64, wall_s, 0.90);
         let rate = if wall_s > 0.0 {
             acc.done as f64 / wall_s
         } else {
@@ -498,6 +583,7 @@ impl ShardedCoordinator {
             } else {
                 0.0
             },
+            stream: acc.stream,
             timeline: acc.timeline,
             utilization: util,
             rate_per_s: rate,
@@ -505,6 +591,8 @@ impl ShardedCoordinator {
             steal_bulks,
             steal_tasks,
             shards,
+            trace,
+            trace_events,
             results: acc.results,
         })
     }

@@ -41,6 +41,7 @@ use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::metrics::trace::{TraceKind, TraceScope, TraceSink};
 use crate::runtime::DockEngine;
 use crate::task::{TaskDesc, TaskKind, TaskResult, TaskState};
 use crate::util::rng::SplitMix64;
@@ -438,6 +439,7 @@ fn next_bulk(
     home: usize,
     steal: bool,
     steals: &StealCounters,
+    tr: &mut TraceScope,
 ) -> Option<Vec<TaskDesc>> {
     if queues.len() == 1 || !steal {
         // Single shard or ablation: the plain blocking pull — no polling,
@@ -455,6 +457,7 @@ fn next_bulk(
             if let TryPull::Bulk(b) = queues[victim].try_pull_bulk() {
                 steals.bulks.fetch_add(1, Ordering::Relaxed);
                 steals.tasks.fetch_add(b.len() as u64, Ordering::Relaxed);
+                tr.rec(TraceKind::Steal, victim as u64, b.len() as u64);
                 return Some(b);
             }
             // Raced out or the victim drained meanwhile: re-sweep.
@@ -501,6 +504,7 @@ impl WorkerPool {
             results,
             t0,
             Arc::new(StealCounters::new()),
+            Arc::new(TraceSink::disabled()),
         )
     }
 
@@ -530,6 +534,7 @@ impl WorkerPool {
         results: Sender<Vec<TaskResult>>,
         t0: Instant,
         steals: Arc<StealCounters>,
+        tracer: Arc<TraceSink>,
     ) -> Self {
         assert!(home < queues.len(), "home shard out of range");
         assert!(n_workers > 0, "a shard needs workers to drain its queue");
@@ -552,10 +557,14 @@ impl WorkerPool {
                 let ready = ready.clone();
                 let engine = cfg.engine;
                 let scale = cfg.exec_time_scale;
+                let tracer = tracer.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("raptor-w{gid}e{e}"))
                     .spawn(move || {
-                        executor_loop(gid, engine, scale, &buffer, &results, &cancel, &ready, t0);
+                        let mut tr = tracer.scope(home as u16, gid, t0);
+                        executor_loop(
+                            gid, engine, scale, &buffer, &results, &cancel, &ready, t0, &mut tr,
+                        );
                     })
                     .expect("spawning executor thread");
                 handles.push(handle);
@@ -571,13 +580,15 @@ impl WorkerPool {
                     let results = results.clone();
                     let cancel = cancel.clone();
                     let steals = steals.clone();
+                    let tracer = tracer.clone();
                     let bulk = cfg.bulk_size;
                     let handle = std::thread::Builder::new()
                         .name(format!("raptor-w{gid}-refill"))
                         .spawn(move || {
+                            let mut tr = tracer.scope(home as u16, gid, t0);
                             refill_loop(
                                 gid, &queues, home, steal, &steals, &buffer, slots, bulk,
-                                &cancel, &results, t0,
+                                &cancel, &results, t0, &mut tr,
                             );
                         })
                         .expect("spawning refill thread");
@@ -589,14 +600,16 @@ impl WorkerPool {
                 let bufs = buffers.clone();
                 let results = results.clone();
                 let steals = steals.clone();
+                let tracer = tracer.clone();
                 let seed = 0x0D15_7A7C_4E57u64 ^ n_workers as u64 ^ ((home as u64) << 32);
                 let dispatcher = Dispatcher::new(cfg.dispatch, seed);
                 let handle = std::thread::Builder::new()
                     .name(format!("raptor-c{home}-dispatch"))
                     .spawn(move || {
+                        let mut tr = tracer.scope(home as u16, crate::task::NO_WORKER, t0);
                         dispatch_loop(
                             &queues, home, steal, &steals, &bufs, worker_base, dispatcher,
-                            &results, t0,
+                            &results, t0, &mut tr,
                         );
                     })
                     .expect("spawning dispatcher thread");
@@ -663,18 +676,39 @@ fn refill_loop(
     cancel: &AtomicBool,
     results: &Sender<Vec<TaskResult>>,
     t0: Instant,
+    tr: &mut TraceScope,
 ) {
     loop {
         if !buffer.wait_refill(slots, bulk_size, cancel) {
             break; // buffer closed (executors lost their consumer)
         }
-        match next_bulk(queues, home, steal, steals) {
+        match next_bulk(queues, home, steal, steals, tr) {
             Some(tasks) => {
+                // Capture uids before `push_many` consumes the bulk; the
+                // capture itself is gated so the disabled path allocates
+                // nothing.
+                let uids: Vec<u64> = if tr.on() {
+                    tasks.iter().map(|t| t.uid).collect()
+                } else {
+                    Vec::new()
+                };
+                tr.rec(
+                    TraceKind::Refill,
+                    uids.first().copied().unwrap_or(0),
+                    tasks.len() as u64,
+                );
+                for &uid in &uids {
+                    tr.rec(TraceKind::Pulled, uid, 0);
+                }
+                tr.depth_gauge(home as u16, || queues[home].backlog_bulks() as u64);
                 if let Err(rejected) = buffer.push_many(tasks) {
                     // Buffer closed underneath us (teardown): conservation
                     // still holds — surface the stranded tasks as Canceled.
                     cancel_all(rejected, worker_id, results, t0);
                     break;
+                }
+                for &uid in &uids {
+                    tr.rec(TraceKind::Buffered, uid, 0);
                 }
             }
             None => break, // queue closed and drained
@@ -700,12 +734,31 @@ fn dispatch_loop(
     mut dispatcher: Dispatcher,
     results: &Sender<Vec<TaskResult>>,
     t0: Instant,
+    tr: &mut TraceScope,
 ) {
-    while let Some(tasks) = next_bulk(queues, home, steal, steals) {
+    while let Some(tasks) = next_bulk(queues, home, steal, steals, tr) {
+        let uids: Vec<u64> = if tr.on() {
+            tasks.iter().map(|t| t.uid).collect()
+        } else {
+            Vec::new()
+        };
+        tr.rec(
+            TraceKind::Refill,
+            uids.first().copied().unwrap_or(0),
+            tasks.len() as u64,
+        );
+        for &uid in &uids {
+            tr.rec(TraceKind::Pulled, uid, 0);
+        }
+        tr.depth_gauge(home as u16, || queues[home].backlog_bulks() as u64);
         let buffered: Vec<u64> = buffers.iter().map(|b| b.len() as u64).collect();
         let w = dispatcher.choose(&buffered);
         if let Err(rejected) = buffers[w].push_many(tasks) {
             cancel_all(rejected, worker_base + w as u32, results, t0);
+        } else {
+            for &uid in &uids {
+                tr.rec_at(TraceKind::Buffered, uid, 0, home as u16, worker_base + w as u32);
+            }
         }
     }
     for b in buffers {
@@ -759,6 +812,7 @@ fn executor_loop(
     cancel: &AtomicBool,
     ready: &AtomicU64,
     t0: Instant,
+    tr: &mut TraceScope,
 ) {
     // Per-executor engine bootstrap (PJRT client + artifact compile).
     let mut engine = match engine_kind {
@@ -788,11 +842,13 @@ fn executor_loop(
             TryPop::Closed => None,
             TryPop::Empty => {
                 // About to park: hand the collector what we have so its
-                // counting (and the feeder behind it) keeps moving.
+                // counting (and the feeder behind it) keeps moving, and
+                // flush buffered trace events for the same reason.
                 if !flush_results(&mut batch, results) {
                     buffer.close();
                     return;
                 }
+                tr.flush();
                 buffer.pop(&mut cursor)
             }
         };
@@ -801,7 +857,17 @@ fn executor_loop(
         let result = if cancel.load(Ordering::SeqCst) {
             TaskResult::canceled(task.uid, started, worker_id)
         } else {
-            run_task(&task, engine_kind, engine.as_mut(), exec_time_scale, worker_id, started, t0)
+            tr.rec(TraceKind::ExecStart, task.uid, 0);
+            let r = run_task(
+                &task, engine_kind, engine.as_mut(), exec_time_scale, worker_id, started, t0,
+            );
+            // `ExecDone` marks *successful* completion only, so its count
+            // reconstructs `RunReport::done` exactly (failed/canceled
+            // attempts terminate via `Collected` lanes instead).
+            if r.state == TaskState::Done {
+                tr.rec(TraceKind::ExecDone, task.uid, 0);
+            }
+            r
         };
         batch.push(result);
         if batch.len() >= RESULT_BATCH && !flush_results(&mut batch, results) {
@@ -1122,6 +1188,7 @@ mod tests {
             tx,
             Instant::now(),
             steals.clone(),
+            Arc::new(TraceSink::disabled()),
         );
         for b in 0..3u64 {
             let bulk: Vec<TaskDesc> = (0..16)
@@ -1164,6 +1231,7 @@ mod tests {
             tx,
             Instant::now(),
             steals.clone(),
+            Arc::new(TraceSink::disabled()),
         );
         q1.push_bulk((0..4).map(|i| TaskDesc::function(i, call(i * 8, 8))).collect())
             .unwrap();

@@ -9,14 +9,14 @@
 
 use raptor::campaign::{self, figures, table};
 use raptor::coordinator::{Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig};
-use raptor::metrics::{print_comparison, Table1Row};
+use raptor::metrics::{print_comparison, Table1Row, TraceConfig};
 use raptor::pilot::GlobalSchedulerModel;
 use raptor::util::cli::Args;
 use raptor::workload::{DockTimeModel, LigandLibrary};
 
 const VALUE_KEYS: &[&str] = &[
     "id", "scale", "out", "tasks", "workers", "slots", "seed", "bundle", "executors", "policy",
-    "bulk", "queue", "coordinators",
+    "bulk", "queue", "coordinators", "trace", "trace-sample",
 ];
 
 fn main() {
@@ -50,6 +50,9 @@ USAGE:
   raptor dock [--tasks N] [--workers W] [--executors E]
               [--policy pull|rr|least] [--bulk B] [--queue ring|condvar]
               [--coordinators N] [--no-steal]  real docking via PJRT workers
+              [--trace out.jsonl] [--trace-sample N] [--progress]
+              --trace writes raw JSONL + a .chrome.json Perfetto trace;
+              --progress prints live totals (implies tracing on)
   raptor baseline [--tasks N] [--slots S]     baselines: RP-only, static, pull
   raptor info                                 platform presets + artifacts";
 
@@ -130,6 +133,9 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
     let queue_impl = QueueImpl::parse(args.get("queue").unwrap_or("ring"))?;
     let coordinators: u32 = args.get_parse("coordinators", 1)?;
     let steal = !args.flag("no-steal");
+    let trace_out = args.get("trace").map(String::from);
+    let trace_sample = args.get_parse_opt::<u64>("trace-sample")?;
+    let progress = args.flag("progress");
     let lib = LigandLibrary::tiny(n_tasks * bundle as u64);
     println!(
         "real-mode docking: {n_tasks} calls x {bundle} ligands on {workers} workers x {executors} executors \
@@ -145,6 +151,12 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
         queue_impl,
         n_coordinators: coordinators,
         steal,
+        trace: TraceConfig {
+            // The live ticker reads the sink's counters, so --progress
+            // needs recording on even without an output path.
+            enabled: trace_out.is_some() || progress,
+            depth_sample: trace_sample.unwrap_or(TraceConfig::default().depth_sample),
+        },
         ..Default::default()
     };
     let mut c = Coordinator::new(cfg)?;
@@ -152,7 +164,33 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
     c.submit(raptor::workload::calls_to_tasks(calls, 0))?;
     let t0 = std::time::Instant::now();
     c.start()?;
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let ticker = progress.then(|| {
+        let tracer = c.tracer();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            use std::sync::atomic::Ordering;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(500));
+                let l = tracer.live();
+                let depth: Vec<String> = l.queue_depth.iter().map(u64::to_string).collect();
+                eprintln!(
+                    "[progress] submitted={} done={} failed={} canceled={} steals={} qdepth=[{}]",
+                    l.submitted,
+                    l.done,
+                    l.failed,
+                    l.canceled,
+                    l.steal_bulks,
+                    depth.join(",")
+                );
+            }
+        })
+    });
     let report = c.join()?;
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(t) = ticker {
+        let _ = t.join();
+    }
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "done={} failed={} wall={:.2}s  rate={:.0} calls/s = {:.0} docks/s  util(avg/steady)={:.0}%/{:.0}%",
@@ -182,6 +220,31 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
                 s.steal_tasks
             );
         }
+    }
+    if let Some(ta) = &report.trace {
+        println!("per-stage breakdown (trace):");
+        for (k, v) in ta.stages.means() {
+            println!("  {k:<22} {v:>12.6}");
+        }
+        for s in &ta.per_shard {
+            println!(
+                "  shard {}: exec_done={} steal_bulks={} util(avg/steady)={:.0}%/{:.0}%",
+                s.shard,
+                s.exec_done,
+                s.steal_bulks,
+                s.utilization.avg * 100.0,
+                s.utilization.steady * 100.0
+            );
+        }
+    }
+    if let Some(path) = &trace_out {
+        raptor::metrics::trace::write_jsonl(path, &report.trace_events)?;
+        let chrome = format!("{path}.chrome.json");
+        raptor::metrics::trace::write_chrome_trace(&chrome, &report.trace_events)?;
+        println!(
+            "trace: {} events -> {path} (JSONL) + {chrome} (Perfetto)",
+            report.trace_events.len()
+        );
     }
     Ok(())
 }

@@ -5,9 +5,14 @@
 pub mod report;
 pub mod stream;
 pub mod timeline;
+pub mod trace;
 pub mod utilization;
 
 pub use report::{print_comparison, BenchReport, Table1Row};
 pub use stream::{StreamMetrics, TaskClass};
 pub use timeline::Timeline;
+pub use trace::{
+    analyze, LiveSnapshot, StageBreakdown, TraceAnalysis, TraceConfig, TraceEvent, TraceKind,
+    TraceScope, TraceSink,
+};
 pub use utilization::{utilization, Utilization};

@@ -110,6 +110,40 @@ impl StreamMetrics {
         self.last_finish = self.last_finish.max(t);
     }
 
+    /// Fold one completed task's whole `[start, finish]` occupancy into
+    /// the windows in a single call.  Unlike the `start`/`finish` pair
+    /// this is **order-independent** — the real-mode collector receives
+    /// results out of submission order, which the incremental integral
+    /// rejects (time would run backwards).  Never touches `level` /
+    /// `last_t`, so use either the incremental API *or* `span` on one
+    /// collector, not both.
+    pub fn span(&mut self, start: f64, finish: f64, cores: f64, class: TaskClass) {
+        let start = start.max(0.0);
+        let finish = finish.max(start);
+        let w1 = self.window(finish);
+        let w0 = (start / self.dt) as usize;
+        for w in w0..=w1 {
+            let lo = w as f64 * self.dt;
+            let overlap = (finish.min(lo + self.dt) - start.max(lo)).max(0.0);
+            self.conc_area[w] += cores * overlap;
+        }
+        let duration = finish - start;
+        match class {
+            TaskClass::Function => {
+                self.fn_counts[w1] += 1;
+                self.fn_durations.push(duration);
+                self.fn_hist.push(duration);
+            }
+            TaskClass::Executable => {
+                self.ex_counts[w1] += 1;
+                self.ex_durations.push(duration);
+                self.ex_hist.push(duration);
+            }
+        }
+        self.first_start = self.first_start.min(start);
+        self.last_finish = self.last_finish.max(finish);
+    }
+
     pub fn total_finished(&self) -> u64 {
         self.fn_durations.count() + self.ex_durations.count()
     }
@@ -170,7 +204,11 @@ impl StreamMetrics {
     pub fn utilization(&self, capacity: f64, end: f64, frac: f64) -> crate::metrics::Utilization {
         let conc = self.concurrency_series();
         let avg = conc.mean_over(0.0, end) / capacity;
-        let thresh = self.peak_conc * frac;
+        // `peak_conc` only advances through the incremental `start` API;
+        // when tasks arrived via `span` the window means are the best
+        // peak estimate available.
+        let peak = conc.points.iter().map(|&(_, v)| v).fold(self.peak_conc, f64::max);
+        let thresh = peak * frac;
         let mut from = 0.0;
         let mut to = 0.0;
         let mut seen = false;
@@ -265,6 +303,36 @@ mod tests {
         let u = m.utilization(4.0, 100.0, 0.9);
         assert!(u.avg > 0.98, "avg {}", u.avg);
         assert!(u.steady > 0.98);
+    }
+
+    #[test]
+    fn span_matches_incremental_integral() {
+        let mut a = StreamMetrics::new(1.0, 10.0, 10);
+        a.start(0.5, 1.0);
+        a.finish(3.5, 3.0, 1.0, TaskClass::Function);
+        let mut b = StreamMetrics::new(1.0, 10.0, 10);
+        b.span(0.5, 3.5, 1.0, TaskClass::Function);
+        let ca = a.concurrency_series();
+        let cb = b.concurrency_series();
+        for (pa, pb) in ca.points.iter().zip(&cb.points) {
+            assert!((pa.1 - pb.1).abs() < 1e-9, "window {pa:?} vs {pb:?}");
+        }
+        assert_eq!(b.total_finished(), 1);
+        assert!((b.fn_durations.mean() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn span_is_order_independent_and_utilization_works() {
+        let mut m = StreamMetrics::new(1.0, 10.0, 10);
+        // Completions arrive out of order — the incremental API would
+        // trip its backwards-time debug_assert; spans fold independently.
+        m.span(5.0, 9.0, 1.0, TaskClass::Executable);
+        m.span(0.0, 4.0, 1.0, TaskClass::Function);
+        m.span(0.0, 9.0, 1.0, TaskClass::Function);
+        assert_eq!(m.total_finished(), 3);
+        let u = m.utilization(2.0, 9.0, 0.9);
+        assert!(u.avg > 0.8, "avg {}", u.avg);
+        assert!(u.steady > 0.9, "steady {}", u.steady);
     }
 
     #[test]

@@ -1,0 +1,950 @@
+//! Lock-free task-lifecycle tracing: the per-stage event stream behind
+//! the paper's overhead decomposition (RADICAL-Analytics timestamps,
+//! Table I's startup / first-task / utilization columns).
+//!
+//! The tracer mirrors the repo's own batching idiom.  Every thread that
+//! participates in a run (feeder, refill/dispatch, executors, the
+//! collector) owns a [`TraceScope`]: a thread-local buffer of fixed-size
+//! [`TraceEvent`]s flushed in bulks of [`TRACE_FLUSH`] to the shared
+//! [`TraceSink`].  The sink is the only synchronization point, and it is
+//! touched once per bulk, not once per event — the same amortization the
+//! result path uses.
+//!
+//! # Cost model
+//!
+//! * **Disabled** (default): every record call is one `Relaxed` atomic
+//!   load and a branch.  No allocation (the scope buffer is an empty
+//!   `Vec`), no lock, no timestamp read.  The dispatch hot paths are
+//!   untouched.
+//! * **Enabled**: one `Instant::elapsed` read plus a `Vec` push per
+//!   event; one mutex acquisition per [`TRACE_FLUSH`] events (or on
+//!   thread exit via `Drop`).  Live counters ([`TraceSink::live`]) are
+//!   `Relaxed` atomics bumped at record time so a progress ticker reads
+//!   fresh totals without waiting for a flush.
+//!
+//! # Timestamps and ordering
+//!
+//! Timestamps are monotonic nanoseconds from the run epoch (`t0`), so
+//! events from different threads order by `t_ns` only — per-thread
+//! streams are program-ordered, cross-thread ordering is whatever the
+//! clock says.  [`TraceSink::drain`] sorts the merged stream by `t_ns`;
+//! the exporters and [`analyze`] expect that sorted stream.
+//!
+//! # Exports
+//!
+//! [`to_jsonl`] writes one JSON object per line (raw archive format);
+//! [`to_chrome_trace`] writes the Chrome trace-event JSON array —
+//! load it at <https://ui.perfetto.dev>: one process per shard, one
+//! track per thread, `X` spans for task execution, instants for steals
+//! and retry-flush stalls, counter tracks for sampled queue depth.
+
+use std::collections::{BTreeSet, HashMap};
+use std::mem;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::task::NO_WORKER;
+use crate::util::json::{obj, Json};
+use crate::util::stats::Accum;
+
+use super::timeline::Timeline;
+use super::utilization::{utilization, Utilization};
+
+/// Scope buffer size: events flushed to the sink per lock acquisition.
+pub const TRACE_FLUSH: usize = 512;
+
+/// `TraceEvent::shard` for events not tied to a shard (the feeder's own
+/// submissions, control threads).
+pub const NO_SHARD: u16 = u16::MAX;
+
+/// `Collected` event `arg` lanes (terminal state of the collected task).
+pub const LANE_DONE: u64 = 0;
+pub const LANE_FAILED: u64 = 1;
+pub const LANE_CANCELED: u64 = 2;
+
+/// Lifecycle event kinds, in stage order.  `Steal`/`Refill` are bulk
+/// transport events, `RetryFlushStall` marks a collector back-off, and
+/// `QueueDepth` is a sampled gauge (see [`TraceConfig::depth_sample`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceKind {
+    /// Task entered the feeder (uid known, no shard yet).
+    Submitted = 0,
+    /// Task routed into a shard queue (`shard` = target shard).
+    Enqueued = 1,
+    /// Task left a shard queue on a worker's refill/dispatch thread.
+    Pulled = 2,
+    /// Task deposited into a worker's `TaskBuffer`.
+    Buffered = 3,
+    /// Executor began running the task.
+    ExecStart = 4,
+    /// Executor finished the task successfully (`Done` only — failed
+    /// and canceled attempts emit no `ExecDone`, so the count equals
+    /// `RunReport::done` exactly).
+    ExecDone = 5,
+    /// Collector folded the terminal result (`arg` = lane: 0 done,
+    /// 1 failed, 2 canceled).
+    Collected = 6,
+    /// Thief pulled a bulk from a sibling shard (`uid` = victim shard,
+    /// `arg` = tasks moved, `shard` = thief's home).
+    Steal = 7,
+    /// A refill/dispatch bulk landed (`uid` = first task uid,
+    /// `arg` = bulk length).
+    Refill = 8,
+    /// Collector retry-flush found every shard queue full and backed
+    /// off (`arg` = tasks still pending).
+    RetryFlushStall = 9,
+    /// Sampled shard-queue backlog (`arg` = bulks buffered).
+    QueueDepth = 10,
+}
+
+impl TraceKind {
+    pub const COUNT: usize = 11;
+
+    pub const ALL: [TraceKind; Self::COUNT] = [
+        TraceKind::Submitted,
+        TraceKind::Enqueued,
+        TraceKind::Pulled,
+        TraceKind::Buffered,
+        TraceKind::ExecStart,
+        TraceKind::ExecDone,
+        TraceKind::Collected,
+        TraceKind::Steal,
+        TraceKind::Refill,
+        TraceKind::RetryFlushStall,
+        TraceKind::QueueDepth,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Submitted => "submitted",
+            TraceKind::Enqueued => "enqueued",
+            TraceKind::Pulled => "pulled",
+            TraceKind::Buffered => "buffered",
+            TraceKind::ExecStart => "exec_start",
+            TraceKind::ExecDone => "exec_done",
+            TraceKind::Collected => "collected",
+            TraceKind::Steal => "steal",
+            TraceKind::Refill => "refill",
+            TraceKind::RetryFlushStall => "retry_flush_stall",
+            TraceKind::QueueDepth => "queue_depth",
+        }
+    }
+}
+
+/// One fixed-size lifecycle event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Monotonic nanoseconds since the run epoch.
+    pub t_ns: u64,
+    /// Task uid (kind-specific for transport events, see [`TraceKind`]).
+    pub uid: u64,
+    /// Kind-specific argument (lane, bulk length, depth, ...).
+    pub arg: u64,
+    pub kind: TraceKind,
+    /// Shard the event belongs to ([`NO_SHARD`] for control threads).
+    pub shard: u16,
+    /// Global worker id ([`crate::task::NO_WORKER`] for control threads).
+    pub worker: u32,
+    /// Sink-allocated recording-thread id (one per [`TraceScope`]).
+    pub thread: u32,
+}
+
+/// Tracer configuration, off by default (`dock --trace out.jsonl`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceConfig {
+    pub enabled: bool,
+    /// Emit a `QueueDepth` gauge every Nth refill/dispatch iteration
+    /// (0 disables the gauge entirely).
+    pub depth_sample: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            depth_sample: 16,
+        }
+    }
+}
+
+/// Shared event collector.  One per run; threads record through
+/// [`TraceScope`]s handed out by [`TraceSink::scope`].
+#[derive(Debug)]
+pub struct TraceSink {
+    enabled: AtomicBool,
+    depth_sample: u64,
+    /// Recording-thread id allocator.
+    threads: AtomicU32,
+    events: Mutex<Vec<TraceEvent>>,
+    // Live progress counters, bumped Relaxed at record time.
+    submitted: AtomicU64,
+    done: AtomicU64,
+    failed: AtomicU64,
+    canceled: AtomicU64,
+    steal_bulks: AtomicU64,
+    retry_stalls: AtomicU64,
+    /// Latest sampled backlog per shard.
+    depth: Vec<AtomicU64>,
+}
+
+/// Point-in-time progress totals for the `--progress` ticker.
+#[derive(Debug, Clone, Default)]
+pub struct LiveSnapshot {
+    pub submitted: u64,
+    pub done: u64,
+    pub failed: u64,
+    pub canceled: u64,
+    pub steal_bulks: u64,
+    pub retry_stalls: u64,
+    /// Latest sampled backlog (bulks) per shard.
+    pub queue_depth: Vec<u64>,
+}
+
+impl TraceSink {
+    pub fn new(cfg: &TraceConfig, n_shards: usize) -> Self {
+        Self {
+            enabled: AtomicBool::new(cfg.enabled),
+            depth_sample: cfg.depth_sample,
+            threads: AtomicU32::new(0),
+            events: Mutex::new(Vec::new()),
+            submitted: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            canceled: AtomicU64::new(0),
+            steal_bulks: AtomicU64::new(0),
+            retry_stalls: AtomicU64::new(0),
+            depth: (0..n_shards.max(1)).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// A sink that records nothing (the default wiring).
+    pub fn disabled() -> Self {
+        Self::new(&TraceConfig::default(), 1)
+    }
+
+    /// THE hot-path guard: a single `Relaxed` load.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Open a recording scope for the calling thread.  `shard`/`worker`
+    /// are the defaults stamped by [`TraceScope::rec`]; control threads
+    /// pass [`NO_SHARD`] / [`crate::task::NO_WORKER`].  Cheap enough to
+    /// create unconditionally — a scope on a disabled sink never
+    /// allocates.
+    pub fn scope(self: &Arc<Self>, shard: u16, worker: u32, t0: Instant) -> TraceScope {
+        TraceScope {
+            thread: self.threads.fetch_add(1, Ordering::Relaxed),
+            sink: Arc::clone(self),
+            t0,
+            buf: Vec::new(),
+            shard,
+            worker,
+            depth_calls: 0,
+        }
+    }
+
+    fn absorb(&self, mut bulk: Vec<TraceEvent>) {
+        if bulk.is_empty() {
+            return;
+        }
+        self.events.lock().unwrap().append(&mut bulk);
+    }
+
+    fn bump(&self, kind: TraceKind, arg: u64) {
+        match kind {
+            TraceKind::Submitted => {
+                self.submitted.fetch_add(1, Ordering::Relaxed);
+            }
+            TraceKind::Collected => {
+                let lane = match arg {
+                    LANE_FAILED => &self.failed,
+                    LANE_CANCELED => &self.canceled,
+                    _ => &self.done,
+                };
+                lane.fetch_add(1, Ordering::Relaxed);
+            }
+            TraceKind::Steal => {
+                self.steal_bulks.fetch_add(1, Ordering::Relaxed);
+            }
+            TraceKind::RetryFlushStall => {
+                self.retry_stalls.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+
+    /// Events flushed to the sink so far (buffered scope events not
+    /// included) — test hook.
+    pub fn buffered_events(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// Take the merged stream, sorted by timestamp.  Call after every
+    /// scope has flushed (threads joined / scopes dropped).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut ev = mem::take(&mut *self.events.lock().unwrap());
+        ev.sort_by_key(|e| e.t_ns);
+        ev
+    }
+
+    /// Current progress totals (Relaxed reads; exact at quiescence).
+    pub fn live(&self) -> LiveSnapshot {
+        LiveSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            done: self.done.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            canceled: self.canceled.load(Ordering::Relaxed),
+            steal_bulks: self.steal_bulks.load(Ordering::Relaxed),
+            retry_stalls: self.retry_stalls.load(Ordering::Relaxed),
+            queue_depth: self.depth.iter().map(|d| d.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Per-thread event buffer.  Flushes to the sink every [`TRACE_FLUSH`]
+/// events and on drop (thread exit), so no event is lost at teardown.
+pub struct TraceScope {
+    sink: Arc<TraceSink>,
+    t0: Instant,
+    buf: Vec<TraceEvent>,
+    thread: u32,
+    shard: u16,
+    worker: u32,
+    depth_calls: u64,
+}
+
+impl TraceScope {
+    /// Whether recording is on — gate any per-event argument capture
+    /// (e.g. collecting uids before a `Vec` is consumed) on this.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.sink.enabled()
+    }
+
+    /// Record an event stamped with this scope's shard/worker.
+    /// Disabled path: one `Relaxed` load and out.
+    #[inline]
+    pub fn rec(&mut self, kind: TraceKind, uid: u64, arg: u64) {
+        if !self.sink.enabled() {
+            return;
+        }
+        self.push(kind, uid, arg, self.shard, self.worker);
+    }
+
+    /// Record an event attributed to an explicit shard/worker (the
+    /// feeder stamping the target shard, the collector stamping the
+    /// executing worker).
+    #[inline]
+    pub fn rec_at(&mut self, kind: TraceKind, uid: u64, arg: u64, shard: u16, worker: u32) {
+        if !self.sink.enabled() {
+            return;
+        }
+        self.push(kind, uid, arg, shard, worker);
+    }
+
+    /// Sampled queue-depth gauge: records every `depth_sample`-th call;
+    /// `depth` is only evaluated when a sample is taken.
+    pub fn depth_gauge(&mut self, shard: u16, depth: impl FnOnce() -> u64) {
+        if !self.sink.enabled() {
+            return;
+        }
+        self.depth_calls += 1;
+        let n = self.sink.depth_sample;
+        if n == 0 || self.depth_calls % n != 0 {
+            return;
+        }
+        let d = depth();
+        if let Some(g) = self.sink.depth.get(shard as usize) {
+            g.store(d, Ordering::Relaxed);
+        }
+        self.push(TraceKind::QueueDepth, 0, d, shard, self.worker);
+    }
+
+    fn push(&mut self, kind: TraceKind, uid: u64, arg: u64, shard: u16, worker: u32) {
+        self.sink.bump(kind, arg);
+        self.buf.push(TraceEvent {
+            t_ns: self.t0.elapsed().as_nanos() as u64,
+            uid,
+            arg,
+            kind,
+            shard,
+            worker,
+            thread: self.thread,
+        });
+        if self.buf.len() >= TRACE_FLUSH {
+            self.flush();
+        }
+    }
+
+    /// Hand buffered events to the sink (idle points, pre-drain).
+    pub fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            self.sink.absorb(mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Post-run analysis
+// ---------------------------------------------------------------------------
+
+/// Per-stage latency decomposition over first-occurrence stage
+/// timestamps (a retried task contributes its first pass per stage).
+#[derive(Debug, Clone)]
+pub struct StageBreakdown {
+    /// `pulled − enqueued`: time spent in a shard queue.
+    pub queue_wait_s: Accum,
+    /// `exec_start − buffered`: time spent in a worker's task buffer.
+    pub buffer_wait_s: Accum,
+    /// `exec_done − exec_start`: successful execution time.
+    pub exec_s: Accum,
+    /// `collected − exec_done`: result-channel + collector lag.
+    pub collect_lag_s: Accum,
+    /// Steady-state completion rate: `exec_done` events per second over
+    /// the p10..p90 completion window (0 when fewer than 2 completions).
+    pub exec_done_rate_per_s: f64,
+}
+
+impl StageBreakdown {
+    /// `(label, value)` pairs for report extras / printing.
+    pub fn means(&self) -> [(&'static str, f64); 5] {
+        [
+            ("queue_wait_mean_s", self.queue_wait_s.mean()),
+            ("buffer_wait_mean_s", self.buffer_wait_s.mean()),
+            ("exec_mean_s", self.exec_s.mean()),
+            ("collect_lag_mean_s", self.collect_lag_s.mean()),
+            ("exec_done_rate_per_s", self.exec_done_rate_per_s),
+        ]
+    }
+}
+
+/// Per-shard view reconstructed from the stream.
+#[derive(Debug, Clone)]
+pub struct ShardTrace {
+    pub shard: u16,
+    /// Successful completions executed on this shard's workers.
+    pub exec_done: u64,
+    /// Bulks this shard's workers stole (thief-attributed).
+    pub steal_bulks: u64,
+    /// Exec-span utilization vs the shard's executor capacity.
+    pub utilization: Utilization,
+}
+
+/// Everything [`analyze`] derives from one sorted event stream.
+#[derive(Debug, Clone)]
+pub struct TraceAnalysis {
+    counts: [u64; TraceKind::COUNT],
+    pub stages: StageBreakdown,
+    pub per_shard: Vec<ShardTrace>,
+}
+
+impl TraceAnalysis {
+    pub fn count(&self, kind: TraceKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    /// Terminal `Collected` events split by lane `(done, failed,
+    /// canceled)` are not kept separately in `counts`; conservation
+    /// checks recount lanes from the stream.  This is the total.
+    pub fn collected(&self) -> u64 {
+        self.count(TraceKind::Collected)
+    }
+}
+
+#[derive(Default, Clone, Copy)]
+struct StageTimes {
+    enqueued: Option<u64>,
+    pulled: Option<u64>,
+    buffered: Option<u64>,
+    exec_start: Option<u64>,
+    exec_done: Option<u64>,
+    collected: Option<u64>,
+    /// Shard of the earliest `ExecStart`.
+    shard: u16,
+}
+
+/// Keep the earliest timestamp per stage; true when `t` became the min.
+fn min_set(slot: &mut Option<u64>, t: u64) -> bool {
+    match slot {
+        Some(old) if *old <= t => false,
+        _ => {
+            *slot = Some(t);
+            true
+        }
+    }
+}
+
+/// Derive per-stage breakdown, per-shard utilization and steady-state
+/// throughput from a drained stream.  `shard_capacity[s]` is shard
+/// `s`'s executor-slot count (missing/zero entries default to 1).
+pub fn analyze(events: &[TraceEvent], shard_capacity: &[f64]) -> TraceAnalysis {
+    const NS: f64 = 1e-9;
+    let mut counts = [0u64; TraceKind::COUNT];
+    let mut per: HashMap<u64, StageTimes> = HashMap::new();
+    let mut steals: HashMap<u16, u64> = HashMap::new();
+    for e in events {
+        counts[e.kind as usize] += 1;
+        match e.kind {
+            TraceKind::Enqueued => {
+                min_set(&mut per.entry(e.uid).or_default().enqueued, e.t_ns);
+            }
+            TraceKind::Pulled => {
+                min_set(&mut per.entry(e.uid).or_default().pulled, e.t_ns);
+            }
+            TraceKind::Buffered => {
+                min_set(&mut per.entry(e.uid).or_default().buffered, e.t_ns);
+            }
+            TraceKind::ExecStart => {
+                let p = per.entry(e.uid).or_default();
+                if min_set(&mut p.exec_start, e.t_ns) {
+                    p.shard = e.shard;
+                }
+            }
+            TraceKind::ExecDone => {
+                min_set(&mut per.entry(e.uid).or_default().exec_done, e.t_ns);
+            }
+            TraceKind::Collected => {
+                min_set(&mut per.entry(e.uid).or_default().collected, e.t_ns);
+            }
+            TraceKind::Steal => {
+                *steals.entry(e.shard).or_insert(0) += 1;
+            }
+            _ => {}
+        }
+    }
+
+    let mut stages = StageBreakdown {
+        queue_wait_s: Accum::new(),
+        buffer_wait_s: Accum::new(),
+        exec_s: Accum::new(),
+        collect_lag_s: Accum::new(),
+        exec_done_rate_per_s: 0.0,
+    };
+    let mut shard_tl: HashMap<u16, (Timeline, u64)> = HashMap::new();
+    let mut done_ts: Vec<u64> = Vec::new();
+    for p in per.values() {
+        if let (Some(a), Some(b)) = (p.enqueued, p.pulled) {
+            if b >= a {
+                stages.queue_wait_s.push((b - a) as f64 * NS);
+            }
+        }
+        if let (Some(a), Some(b)) = (p.buffered, p.exec_start) {
+            if b >= a {
+                stages.buffer_wait_s.push((b - a) as f64 * NS);
+            }
+        }
+        if let (Some(a), Some(b)) = (p.exec_start, p.exec_done) {
+            if b >= a {
+                stages.exec_s.push((b - a) as f64 * NS);
+                let (tl, n) = shard_tl.entry(p.shard).or_insert_with(|| (Timeline::new(), 0));
+                tl.record(a as f64 * NS, b as f64 * NS, 1.0);
+                *n += 1;
+                done_ts.push(b);
+            }
+        }
+        if let (Some(a), Some(b)) = (p.exec_done, p.collected) {
+            if b >= a {
+                stages.collect_lag_s.push((b - a) as f64 * NS);
+            }
+        }
+    }
+
+    // Steady-state rate: completions per second across the middle 80 %
+    // of the sorted exec_done timestamps (trims startup and cooldown).
+    done_ts.sort_unstable();
+    if done_ts.len() >= 2 {
+        let trim = done_ts.len() / 10;
+        let (lo, hi) = (trim, done_ts.len() - 1 - trim);
+        if hi > lo {
+            let span = (done_ts[hi] - done_ts[lo]) as f64 * NS;
+            if span > 0.0 {
+                stages.exec_done_rate_per_s = (hi - lo) as f64 / span;
+            }
+        }
+    }
+
+    let mut per_shard: Vec<ShardTrace> = shard_tl
+        .into_iter()
+        .map(|(s, (tl, n))| {
+            let cap = shard_capacity
+                .get(s as usize)
+                .copied()
+                .filter(|c| *c > 0.0)
+                .unwrap_or(1.0);
+            ShardTrace {
+                shard: s,
+                exec_done: n,
+                steal_bulks: steals.get(&s).copied().unwrap_or(0),
+                utilization: utilization(&tl, cap, None),
+            }
+        })
+        .collect();
+    per_shard.sort_by_key(|s| s.shard);
+
+    TraceAnalysis {
+        counts,
+        stages,
+        per_shard,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+fn event_json(e: &TraceEvent) -> Json {
+    obj(vec![
+        ("t_ns", Json::Num(e.t_ns as f64)),
+        ("kind", Json::Str(e.kind.name().into())),
+        ("uid", Json::Num(e.uid as f64)),
+        ("arg", Json::Num(e.arg as f64)),
+        ("shard", Json::Num(e.shard as f64)),
+        ("worker", Json::Num(e.worker as f64)),
+        ("thread", Json::Num(e.thread as f64)),
+    ])
+}
+
+/// Raw archive format: one JSON object per line.
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&event_json(e).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn shard_label(s: u16) -> String {
+    if s == NO_SHARD {
+        "ctrl".into()
+    } else {
+        format!("shard {s}")
+    }
+}
+
+/// Chrome trace-event JSON array (load in Perfetto).  Expects the
+/// sorted stream from [`TraceSink::drain`]: `X` exec spans close on the
+/// first `ExecDone` (or terminal `Collected`, covering failed attempts)
+/// that follows their `ExecStart`.
+pub fn to_chrome_trace(events: &[TraceEvent]) -> String {
+    let us = |t_ns: u64| Json::Num(t_ns as f64 / 1000.0);
+    let mut out: Vec<Json> = Vec::new();
+
+    let mut shards: BTreeSet<u16> = BTreeSet::new();
+    let mut threads: BTreeSet<(u16, u32, u32)> = BTreeSet::new();
+    for e in events {
+        shards.insert(e.shard);
+        threads.insert((e.shard, e.thread, e.worker));
+    }
+    for s in &shards {
+        out.push(obj(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(*s as f64)),
+            ("args", obj(vec![("name", Json::Str(shard_label(*s)))])),
+        ]));
+    }
+    for (s, t, w) in &threads {
+        let label = if *w == NO_WORKER {
+            format!("ctrl t{t}")
+        } else {
+            format!("worker {w} t{t}")
+        };
+        out.push(obj(vec![
+            ("name", Json::Str("thread_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(*s as f64)),
+            ("tid", Json::Num(*t as f64)),
+            ("args", obj(vec![("name", Json::Str(label))])),
+        ]));
+    }
+
+    let mut open: HashMap<u64, &TraceEvent> = HashMap::new();
+    for e in events {
+        match e.kind {
+            TraceKind::ExecStart => {
+                open.insert(e.uid, e);
+            }
+            TraceKind::ExecDone | TraceKind::Collected => {
+                if let Some(s) = open.remove(&e.uid) {
+                    out.push(obj(vec![
+                        ("name", Json::Str("task".into())),
+                        ("cat", Json::Str("exec".into())),
+                        ("ph", Json::Str("X".into())),
+                        ("pid", Json::Num(s.shard as f64)),
+                        ("tid", Json::Num(s.thread as f64)),
+                        ("ts", us(s.t_ns)),
+                        ("dur", Json::Num(e.t_ns.saturating_sub(s.t_ns) as f64 / 1000.0)),
+                        ("args", obj(vec![("uid", Json::Num(e.uid as f64))])),
+                    ]));
+                }
+            }
+            TraceKind::Steal | TraceKind::RetryFlushStall => {
+                out.push(obj(vec![
+                    ("name", Json::Str(e.kind.name().into())),
+                    ("ph", Json::Str("i".into())),
+                    ("s", Json::Str("t".into())),
+                    ("pid", Json::Num(e.shard as f64)),
+                    ("tid", Json::Num(e.thread as f64)),
+                    ("ts", us(e.t_ns)),
+                    (
+                        "args",
+                        obj(vec![
+                            ("uid", Json::Num(e.uid as f64)),
+                            ("arg", Json::Num(e.arg as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+            TraceKind::QueueDepth => {
+                out.push(obj(vec![
+                    ("name", Json::Str(format!("queue_depth s{}", e.shard))),
+                    ("ph", Json::Str("C".into())),
+                    ("pid", Json::Num(e.shard as f64)),
+                    ("ts", us(e.t_ns)),
+                    ("args", obj(vec![("depth", Json::Num(e.arg as f64))])),
+                ]));
+            }
+            _ => {}
+        }
+    }
+    Json::Arr(out).to_string()
+}
+
+pub fn write_jsonl(path: impl AsRef<Path>, events: &[TraceEvent]) -> anyhow::Result<()> {
+    crate::util::write_file(path, &to_jsonl(events))
+}
+
+pub fn write_chrome_trace(path: impl AsRef<Path>, events: &[TraceEvent]) -> anyhow::Result<()> {
+    crate::util::write_file(path, &to_chrome_trace(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn enabled_sink(n_shards: usize) -> Arc<TraceSink> {
+        Arc::new(TraceSink::new(
+            &TraceConfig {
+                enabled: true,
+                depth_sample: 2,
+            },
+            n_shards,
+        ))
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let sink = Arc::new(TraceSink::disabled());
+        let t0 = Instant::now();
+        {
+            let mut sc = sink.scope(0, 0, t0);
+            assert!(!sc.on());
+            for uid in 0..1000 {
+                sc.rec(TraceKind::ExecStart, uid, 0);
+                sc.rec_at(TraceKind::Enqueued, uid, 0, 1, 7);
+                sc.depth_gauge(0, || panic!("gauge must not be evaluated"));
+            }
+        }
+        assert_eq!(sink.buffered_events(), 0);
+        assert!(sink.drain().is_empty());
+        assert_eq!(sink.live().submitted, 0);
+    }
+
+    #[test]
+    fn scope_flushes_at_threshold_and_on_drop() {
+        let sink = enabled_sink(1);
+        let t0 = Instant::now();
+        let mut sc = sink.scope(0, 0, t0);
+        for uid in 0..TRACE_FLUSH as u64 {
+            sc.rec(TraceKind::Buffered, uid, 0);
+        }
+        assert_eq!(sink.buffered_events(), TRACE_FLUSH, "bulk flush at threshold");
+        sc.rec(TraceKind::Buffered, 9999, 0);
+        assert_eq!(sink.buffered_events(), TRACE_FLUSH, "one event stays buffered");
+        drop(sc);
+        assert_eq!(sink.buffered_events(), TRACE_FLUSH + 1, "drop flushes the rest");
+    }
+
+    #[test]
+    fn flush_on_thread_exit() {
+        let sink = enabled_sink(1);
+        let t0 = Instant::now();
+        let s2 = Arc::clone(&sink);
+        std::thread::spawn(move || {
+            let mut sc = s2.scope(0, 3, t0);
+            sc.rec(TraceKind::ExecStart, 1, 0);
+            sc.rec(TraceKind::ExecDone, 1, 0);
+            sc.rec(TraceKind::Collected, 1, LANE_DONE);
+        })
+        .join()
+        .unwrap();
+        let ev = sink.drain();
+        assert_eq!(ev.len(), 3);
+        assert!(ev.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "drain sorts");
+        assert_eq!(sink.live().done, 1);
+    }
+
+    #[test]
+    fn depth_gauge_samples_every_nth() {
+        let sink = enabled_sink(2);
+        let t0 = Instant::now();
+        let mut sc = sink.scope(1, 0, t0);
+        let mut evaluated = 0u64;
+        for _ in 0..8 {
+            sc.depth_gauge(1, || {
+                evaluated += 1;
+                5
+            });
+        }
+        drop(sc);
+        assert_eq!(evaluated, 4, "depth_sample=2 evaluates every 2nd call");
+        let ev = sink.drain();
+        assert_eq!(ev.len(), 4);
+        assert!(ev.iter().all(|e| e.kind == TraceKind::QueueDepth && e.arg == 5));
+        assert_eq!(sink.live().queue_depth, vec![0, 5]);
+    }
+
+    #[test]
+    fn live_counters_track_lanes() {
+        let sink = enabled_sink(1);
+        let t0 = Instant::now();
+        let mut sc = sink.scope(NO_SHARD, crate::task::NO_WORKER, t0);
+        for uid in 0..5 {
+            sc.rec(TraceKind::Submitted, uid, 0);
+        }
+        sc.rec(TraceKind::Collected, 0, LANE_DONE);
+        sc.rec(TraceKind::Collected, 1, LANE_DONE);
+        sc.rec(TraceKind::Collected, 2, LANE_FAILED);
+        sc.rec(TraceKind::Collected, 3, LANE_CANCELED);
+        sc.rec(TraceKind::Steal, 0, 32);
+        sc.rec(TraceKind::RetryFlushStall, 0, 8);
+        let live = sink.live();
+        assert_eq!(live.submitted, 5);
+        assert_eq!((live.done, live.failed, live.canceled), (2, 1, 1));
+        assert_eq!(live.steal_bulks, 1);
+        assert_eq!(live.retry_stalls, 1);
+    }
+
+    /// Synthetic two-task stream with known stage gaps.
+    fn synthetic_stream() -> Vec<TraceEvent> {
+        let ev = |t_ms: u64, kind, uid, arg, shard| TraceEvent {
+            t_ns: t_ms * 1_000_000,
+            uid,
+            arg,
+            kind,
+            shard,
+            worker: 0,
+            thread: 0,
+        };
+        vec![
+            ev(0, TraceKind::Submitted, 1, 0, NO_SHARD),
+            ev(1, TraceKind::Enqueued, 1, 0, 0),
+            ev(5, TraceKind::Pulled, 1, 0, 0),
+            ev(6, TraceKind::Buffered, 1, 0, 0),
+            ev(10, TraceKind::ExecStart, 1, 0, 0),
+            ev(30, TraceKind::ExecDone, 1, 0, 0),
+            ev(32, TraceKind::Collected, 1, LANE_DONE, 0),
+            ev(0, TraceKind::Submitted, 2, 0, NO_SHARD),
+            ev(2, TraceKind::Enqueued, 2, 0, 1),
+            ev(8, TraceKind::Pulled, 2, 0, 1),
+            ev(9, TraceKind::Buffered, 2, 0, 1),
+            ev(11, TraceKind::ExecStart, 2, 0, 1),
+            ev(41, TraceKind::ExecDone, 2, 0, 1),
+            ev(45, TraceKind::Collected, 2, LANE_DONE, 1),
+            ev(7, TraceKind::Steal, 0, 16, 1),
+        ]
+    }
+
+    #[test]
+    fn analyze_reconstructs_stage_gaps() {
+        let mut events = synthetic_stream();
+        events.sort_by_key(|e| e.t_ns);
+        let a = analyze(&events, &[2.0, 2.0]);
+        assert_eq!(a.count(TraceKind::Submitted), 2);
+        assert_eq!(a.count(TraceKind::ExecDone), 2);
+        assert_eq!(a.collected(), 2);
+        // queue waits: 4 ms and 6 ms; exec: 20 ms and 30 ms.
+        assert!((a.stages.queue_wait_s.mean() - 0.005).abs() < 1e-9);
+        assert!((a.stages.buffer_wait_s.mean() - 0.003).abs() < 1e-9);
+        assert!((a.stages.exec_s.mean() - 0.025).abs() < 1e-9);
+        assert!((a.stages.collect_lag_s.mean() - 0.003).abs() < 1e-9);
+        assert_eq!(a.per_shard.len(), 2);
+        assert_eq!(a.per_shard[0].shard, 0);
+        assert_eq!(a.per_shard[0].exec_done, 1);
+        assert_eq!(a.per_shard[1].steal_bulks, 1);
+        let labels: Vec<&str> = a.stages.means().iter().map(|(k, _)| *k).collect();
+        assert!(labels.contains(&"exec_mean_s"));
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_roundtrip() {
+        let events = synthetic_stream();
+        let text = to_jsonl(&events);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), events.len());
+        for (line, e) in lines.iter().zip(&events) {
+            let v = parse(line).expect("every JSONL line parses");
+            assert_eq!(v.get("kind").unwrap().as_str(), Some(e.kind.name()));
+            assert_eq!(v.get("uid").unwrap().as_u64(), Some(e.uid));
+            assert_eq!(v.get("t_ns").unwrap().as_u64(), Some(e.t_ns));
+        }
+    }
+
+    #[test]
+    fn chrome_trace_parses_with_spans_and_metadata() {
+        let mut events = synthetic_stream();
+        events.sort_by_key(|e| e.t_ns);
+        let text = to_chrome_trace(&events);
+        let v = parse(&text).expect("chrome trace parses");
+        let arr = v.as_arr().unwrap();
+        let phase = |p: &str| {
+            arr.iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some(p))
+                .count()
+        };
+        assert_eq!(phase("X"), 2, "one exec span per completed task");
+        assert_eq!(phase("i"), 1, "steal instant");
+        assert!(phase("M") >= 3, "process + thread metadata");
+        // The span for uid 1 is 20 ms = 20000 us.
+        let span = arr
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("X")
+                    && e.get("args").and_then(|a| a.get("uid")).and_then(Json::as_u64) == Some(1)
+            })
+            .unwrap();
+        assert_eq!(span.get("dur").unwrap().as_u64(), Some(20_000));
+    }
+
+    #[test]
+    fn escaping_survives_hostile_labels() {
+        // Labels are generated, but the writer must stay safe if uids or
+        // shard ids ever reach pathological values.
+        let e = TraceEvent {
+            t_ns: 1,
+            uid: u64::MAX / 2,
+            arg: 0,
+            kind: TraceKind::QueueDepth,
+            shard: NO_SHARD,
+            worker: NO_WORKER,
+            thread: 0,
+        };
+        let text = to_chrome_trace(&[e]);
+        parse(&text).expect("hostile ids still serialize to valid JSON");
+        let line = to_jsonl(&[e]);
+        parse(line.trim()).expect("jsonl line valid");
+    }
+}

@@ -67,6 +67,21 @@ impl Args {
         }
     }
 
+    /// Parse an optional value: `None` when the option is absent (no
+    /// default makes sense, e.g. `--trace-sample` without `--trace`).
+    pub fn get_parse_opt<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.options
+            .get(name)
+            .map(|v| {
+                v.parse()
+                    .map_err(|e| anyhow::anyhow!("bad value for --{name}: {e}"))
+            })
+            .transpose()
+    }
+
     /// Parse a comma-separated list value (`--coordinators 1,2,4,8`).
     /// Absent option → `default`; empty segments are rejected.
     pub fn get_list_parse<T: std::str::FromStr>(
@@ -126,6 +141,14 @@ mod tests {
     fn bad_parse_errors() {
         let a = parse("--scale abc");
         assert!(a.get_parse::<f64>("scale", 1.0).is_err());
+    }
+
+    #[test]
+    fn optional_values_parse() {
+        let a = parse("--scale 0.5");
+        assert_eq!(a.get_parse_opt::<f64>("scale").unwrap(), Some(0.5));
+        assert_eq!(a.get_parse_opt::<f64>("id").unwrap(), None);
+        assert!(parse("--scale abc").get_parse_opt::<f64>("scale").is_err());
     }
 
     #[test]

@@ -6,7 +6,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use raptor::coordinator::{Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig};
+use raptor::metrics::trace::{to_chrome_trace, to_jsonl};
+use raptor::metrics::{TraceConfig, TraceKind};
 use raptor::runtime::{artifacts_built, DockEngine};
+use raptor::util::json::parse;
 use raptor::task::{DockCall, ExecCall, TaskDesc, TaskState};
 use raptor::workload::{calls_to_tasks, LigandLibrary};
 
@@ -461,6 +464,114 @@ fn skewed_shards_steal_only_when_enabled() {
         for s in &report.shards {
             assert_eq!(s.queue_pushed, s.queue_pulled, "shard {} not drained", s.shard);
         }
+    }
+}
+
+/// Lifecycle tracing over a real sharded run: the per-stage analysis is
+/// attached to the report, the event stream balances with the report's
+/// accounting, every JSONL line is valid JSON, and the Chrome-trace
+/// export parses as a single JSON document (what Perfetto loads).
+#[test]
+fn traced_two_coordinator_run_exports_cleanly() {
+    let cfg = RaptorConfig {
+        n_workers: 4,
+        n_coordinators: 2,
+        executors_per_worker: 2,
+        bulk_size: 16,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 0.0,
+        trace: TraceConfig {
+            enabled: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let n = 400u64;
+    c.submit((0..n).map(dock_task)).unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, n);
+
+    let ta = report
+        .trace
+        .as_ref()
+        .expect("trace enabled: analysis attached to the report");
+    assert_eq!(ta.count(TraceKind::Submitted), n, "one Submitted per task");
+    assert_eq!(ta.count(TraceKind::ExecDone), n, "ExecDone == done");
+    assert_eq!(ta.collected(), n, "one Collected per task");
+    assert_eq!(ta.per_shard.len(), 2, "per-shard breakdown per coordinator");
+    for (_, mean) in ta.stages.means() {
+        assert!(mean.is_finite() && mean >= 0.0, "stage means sane");
+    }
+
+    let jsonl = to_jsonl(&report.trace_events);
+    let mut lines = 0usize;
+    for line in jsonl.lines() {
+        parse(line).expect("every JSONL line parses");
+        lines += 1;
+    }
+    assert_eq!(lines, report.trace_events.len(), "one line per event");
+    let chrome = to_chrome_trace(&report.trace_events);
+    parse(&chrome).expect("chrome trace parses as one JSON document");
+}
+
+/// Tracing stays off by default: a plain run attaches no analysis and
+/// carries no events (the disabled hot path records nothing).
+#[test]
+fn untraced_run_carries_no_events() {
+    let cfg = RaptorConfig {
+        n_workers: 2,
+        executors_per_worker: 1,
+        bulk_size: 8,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 0.0,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    c.submit((0..100).map(dock_task)).unwrap();
+    c.start().unwrap();
+    let report = c.join().unwrap();
+    assert_eq!(report.done, 100);
+    assert!(report.trace.is_none(), "no analysis without tracing");
+    assert!(report.trace_events.is_empty(), "no events without tracing");
+}
+
+/// The unbounded per-task timeline is opt-in: absent by default (the
+/// windowed stream metrics carry the lifecycle accounting on every
+/// run), present under `keep_timeline` — and the always-on stream
+/// totals match the terminal count either way.
+#[test]
+fn timeline_is_opt_in_stream_always_on() {
+    for keep in [false, true] {
+        let cfg = RaptorConfig {
+            n_workers: 2,
+            executors_per_worker: 2,
+            bulk_size: 8,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 0.0,
+            keep_timeline: keep,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg).unwrap();
+        let n = 120u64;
+        c.submit((0..n).map(dock_task)).unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, n);
+        assert_eq!(
+            report.timeline.is_some(),
+            keep,
+            "timeline only under keep_timeline"
+        );
+        if let Some(tl) = &report.timeline {
+            assert_eq!(tl.n_tasks() as u64, n, "timeline records every task");
+        }
+        assert_eq!(
+            report.stream.total_finished(),
+            n,
+            "windowed stream counts every terminal task"
+        );
     }
 }
 

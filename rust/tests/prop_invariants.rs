@@ -11,7 +11,7 @@ use common::prop;
 use raptor::coordinator::{
     Coordinator, EngineKind, Partition, Policy, QueueImpl, RaptorConfig, TaskQueue,
 };
-use raptor::metrics::{StreamMetrics, TaskClass};
+use raptor::metrics::{StreamMetrics, TaskClass, TraceConfig, TraceKind};
 use raptor::platform::{BatchSim, QueuePolicy, WaitShape};
 use raptor::sim::Engine;
 use raptor::task::{DockCall, ExecCall, TaskDesc};
@@ -316,6 +316,86 @@ fn prop_sharded_conservation_under_skewed_steals() {
         if !steal {
             assert_eq!(report.steal_bulks, 0, "steal-off run must not steal");
         }
+    });
+}
+
+/// Tracing conservation: with the lifecycle tracer enabled, the event
+/// stream alone reconstructs the run's accounting exactly — one
+/// `Submitted` and one `Collected` per task (the `Collected` arg is the
+/// terminal lane), `ExecDone` recorded only for tasks that finish
+/// `Done` — under randomized shard counts, dispatch shapes, mixed
+/// workloads (instant / sleeping / failing) and clean-join vs stop
+/// interleavings.  Retries must not double-count: a task that fails and
+/// is resubmitted still gets exactly one `Submitted` and one
+/// `Collected`.
+#[test]
+fn prop_trace_reconstructs_conservation() {
+    prop(6, 11, |rng| {
+        let shards = 1 + rng.next_below(3) as u32; // 1..=3
+        let per_shard = 1 + rng.next_below(2) as u32;
+        let do_stop = rng.next_below(2) == 1;
+        let cfg = RaptorConfig {
+            n_workers: shards * per_shard,
+            n_coordinators: shards,
+            executors_per_worker: 1 + rng.next_below(2) as u32,
+            bulk_size: 1 + rng.next_below(16) as usize,
+            queue_capacity: 1 + rng.next_below(8) as usize,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            max_retries: rng.next_below(2) as u32,
+            trace: TraceConfig {
+                enabled: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let total = 100 + rng.next_below(200);
+        let mut c = Coordinator::new(cfg).unwrap();
+        let mut tasks = Vec::new();
+        for i in 0..total {
+            tasks.push(random_task(i, rng));
+        }
+        c.submit(tasks).unwrap();
+        c.start().unwrap();
+        let report = if do_stop {
+            std::thread::sleep(std::time::Duration::from_millis(rng.next_below(15)));
+            c.stop().unwrap()
+        } else {
+            c.join().unwrap()
+        };
+
+        assert_eq!(report.done + report.failed + report.canceled, total);
+        let ta = report.trace.as_ref().expect("enabled trace must analyze");
+        assert_eq!(
+            ta.count(TraceKind::Submitted),
+            total,
+            "one Submitted per task (stop={do_stop}, shards={shards})"
+        );
+        // Recount the terminal lanes straight from the raw stream; they
+        // must agree with the collector's counters exactly.
+        let mut lanes = [0u64; 3];
+        let mut collected_uids: Vec<u64> = Vec::new();
+        for e in &report.trace_events {
+            if e.kind == TraceKind::Collected {
+                lanes[(e.arg as usize).min(2)] += 1;
+                collected_uids.push(e.uid);
+            }
+        }
+        assert_eq!(lanes[0], report.done, "Collected lane 0 == done");
+        assert_eq!(lanes[1], report.failed, "Collected lane 1 == failed");
+        assert_eq!(lanes[2], report.canceled, "Collected lane 2 == canceled");
+        assert_eq!(
+            ta.count(TraceKind::ExecDone),
+            report.done,
+            "ExecDone recorded exactly for Done tasks"
+        );
+        collected_uids.sort_unstable();
+        collected_uids.dedup();
+        assert_eq!(
+            collected_uids.len() as u64,
+            total,
+            "each task Collected exactly once, even across retries"
+        );
     });
 }
 
