@@ -19,10 +19,15 @@
 //! 4. work-stealing ablation on a pathologically skewed 2-shard
 //!    workload (every bulk strided to shard 0 is a sleeper bulk):
 //!    steal on vs off, with steal counters recorded;
-//! 5. modeled RP-only vs RAPTOR-pull makespans across task durations —
+//! 5. DAG pipeline smoke: the built-in featurize→dock→score pipeline
+//!    through the dependency scheduler (collector-released ready-sets),
+//!    with conservation and release accounting asserted;
+//! 6. fault-injection smoke: a worker killed mid-run, heartbeat
+//!    detection + in-flight reassignment asserted to conserve tasks;
+//! 7. modeled RP-only vs RAPTOR-pull makespans across task durations —
 //!    reproduces "performance degrades for short running tasks on large
 //!    resources" with the crossover thresholds;
-//! 6. dispatch-policy ablation (pull vs static) under the modeled
+//! 8. dispatch-policy ablation (pull vs static) under the modeled
 //!    long-tail workload.
 //!
 //! Every measured real-mode run asserts cross-shard task conservation
@@ -38,7 +43,7 @@ use std::time::Instant;
 use raptor::baseline;
 use raptor::coordinator::worker::synthetic_scores;
 use raptor::coordinator::{
-    BulkQueue, Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig, RunReport,
+    pipeline_dag, BulkQueue, Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig, RunReport,
 };
 use raptor::metrics::{BenchReport, TraceConfig, TraceKind};
 use raptor::pilot::GlobalSchedulerModel;
@@ -429,6 +434,114 @@ fn main() -> anyhow::Result<()> {
             if steal { "on" } else { "off" },
             r.steal_bulks,
             r.steal_tasks
+        );
+    }
+
+    // DAG smoke: the built-in featurize -> dock -> score pipeline run
+    // through the dependency scheduler on 2 shards with stealing on.
+    // Ready-sets are released by the collector as parents resolve, so
+    // the measured rate includes the release/flush path, not just the
+    // feeder stride.
+    println!("\n== DAG pipeline (featurize -> dock -> score, 2 coordinators, steal on) ==");
+    let chains: u64 = if smoke { 64 } else { 512 };
+    {
+        let cfg = RaptorConfig {
+            n_workers: 4,
+            executors_per_worker: SWEEP_EXECUTORS,
+            bulk_size: SWEEP_BULK,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            n_coordinators: 2,
+            steal: true,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg)?;
+        let n = c.submit_dag(pipeline_dag(chains, 8, 0.0005))?;
+        let t0 = Instant::now();
+        c.start()?;
+        let r = c.join()?;
+        let rate = n as f64 / t0.elapsed().as_secs_f64();
+        assert_conservation(&r, n);
+        assert_eq!(r.done, n, "every DAG stage completes");
+        let d = r.dag.as_ref().expect("DAG submission produces a DAG report");
+        assert_eq!(d.released, 2 * chains, "dock+score released as parents resolve");
+        assert_eq!(d.cascade_canceled, 0, "no failures, no cascades");
+        report.push_entry(
+            vec![
+                ("bench", Json::Str("dag_pipeline".into())),
+                ("coordinators", Json::Num(2.0)),
+                ("chains", Json::Num(chains as f64)),
+                ("tasks", Json::Num(n as f64)),
+            ],
+            rate,
+            vec![
+                ("dag_released", Json::Num(d.released as f64)),
+                ("dag_max_depth", Json::Num(d.max_depth as f64)),
+                ("steal_bulks", Json::Num(r.steal_bulks as f64)),
+            ],
+        );
+        println!(
+            "  {chains} chains ({n} tasks): {rate:>8.0} tasks/s   released {} / depth {}",
+            d.released, d.max_depth
+        );
+    }
+
+    // Fault-injection smoke: worker 1 dies after a handful of tasks;
+    // the heartbeat sweep must detect it, reassign its in-flight work,
+    // and still conserve every submitted task.
+    println!("\n== fault injection (worker 1 killed mid-run, heartbeat reassignment) ==");
+    let fault_n: u64 = if smoke { 400 } else { 4_000 };
+    {
+        let cfg = RaptorConfig {
+            n_workers: 4,
+            executors_per_worker: SWEEP_EXECUTORS,
+            bulk_size: 16,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            n_coordinators: 2,
+            steal: true,
+            heartbeat_timeout: Some(std::time::Duration::from_millis(100)),
+            kill_worker: Some(1),
+            kill_after: 5,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg)?;
+        c.submit((0..fault_n).map(|i| {
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec![],
+                    sim_duration: 0.001,
+                },
+            )
+        }))?;
+        let t0 = Instant::now();
+        c.start()?;
+        let r = c.join()?;
+        let rate = fault_n as f64 / t0.elapsed().as_secs_f64();
+        assert_eq!(
+            r.done + r.failed + r.canceled,
+            fault_n,
+            "conservation must survive worker death"
+        );
+        assert_eq!(r.done, fault_n, "reassigned tasks all complete elsewhere");
+        assert_eq!(r.workers_lost, 1, "exactly the injected death is detected");
+        assert!(r.reassigned > 0, "the dead worker held in-flight tasks");
+        report.push_entry(
+            vec![
+                ("bench", Json::Str("fault_injection".into())),
+                ("coordinators", Json::Num(2.0)),
+                ("tasks", Json::Num(fault_n as f64)),
+            ],
+            rate,
+            vec![
+                ("reassigned", Json::Num(r.reassigned as f64)),
+                ("workers_lost", Json::Num(r.workers_lost as f64)),
+            ],
+        );
+        println!(
+            "  {fault_n} tasks, worker 1 killed after {}: {rate:>8.0} tasks/s   reassigned {}",
+            5, r.reassigned
         );
     }
 

@@ -77,6 +77,28 @@ pub struct RaptorConfig {
     /// the disabled record path is a single relaxed atomic load, so the
     /// dispatch hot paths are untouched.
     pub trace: TraceConfig,
+    /// Worker-death detection (`--heartbeat-ms N`): a worker whose
+    /// heartbeat counter has not moved for this long *while holding
+    /// in-flight tasks* is declared dead; the collector reassigns its
+    /// in-flight tasks through the batched-retry machinery.  `None`
+    /// (default) disables detection and every recovery structure —
+    /// no registry locks, no board, no collector polling.
+    ///
+    /// Contract: the timeout must exceed the longest single task, since
+    /// executors only beat between tasks.  A too-short timeout wastes
+    /// work (duplicate execution) but stays correct — the collector
+    /// counts exactly one terminal result per reassigned uid.
+    pub heartbeat_timeout: Option<std::time::Duration>,
+    /// Fault injection (`--kill-worker GID`): this global worker id
+    /// "dies" after executing [`Self::kill_after`] tasks — its executors
+    /// swallow claimed tasks without reporting, its refill stops
+    /// pulling, its heartbeats stop.  Requires `heartbeat_timeout`
+    /// (otherwise the run would hang on the swallowed tasks) and
+    /// pull-based dispatch (a push dispatcher would block on the dead
+    /// worker's full buffer).
+    pub kill_worker: Option<u32>,
+    /// Tasks the killed worker executes normally before dying.
+    pub kill_after: u64,
 }
 
 impl Default for RaptorConfig {
@@ -96,6 +118,9 @@ impl Default for RaptorConfig {
             keep_timeline: false,
             max_retries: 0,
             trace: TraceConfig::default(),
+            heartbeat_timeout: None,
+            kill_worker: None,
+            kill_after: 1,
         }
     }
 }
@@ -142,6 +167,30 @@ impl RaptorConfig {
             self.dispatch != Policy::Static,
             "static assignment is a simulator-only baseline; real mode needs a dynamic dispatch policy"
         );
+        if let Some(t) = self.heartbeat_timeout {
+            anyhow::ensure!(
+                !t.is_zero(),
+                "heartbeat_timeout must be positive when set"
+            );
+        }
+        if let Some(victim) = self.kill_worker {
+            anyhow::ensure!(
+                victim < self.n_workers,
+                "kill_worker {} out of range (have {} workers)",
+                victim,
+                self.n_workers
+            );
+            anyhow::ensure!(
+                self.heartbeat_timeout.is_some(),
+                "kill_worker requires heartbeat_timeout: without detection the \
+                 swallowed tasks never reach a terminal state and the run hangs"
+            );
+            anyhow::ensure!(
+                self.dispatch == Policy::PullBased,
+                "kill_worker requires pull-based dispatch: a push dispatcher \
+                 would block on the dead worker's buffer"
+            );
+        }
         Ok(())
     }
 }
@@ -213,6 +262,50 @@ mod tests {
             };
             cfg.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn recovery_validation() {
+        // Heartbeat alone is fine.
+        let c = RaptorConfig {
+            heartbeat_timeout: Some(std::time::Duration::from_millis(100)),
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        // Zero timeout rejected.
+        let c = RaptorConfig {
+            heartbeat_timeout: Some(std::time::Duration::ZERO),
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        // Kill without heartbeat detection would hang.
+        let c = RaptorConfig {
+            kill_worker: Some(0),
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        // Kill with detection, victim in range, pull dispatch: ok.
+        let c = RaptorConfig {
+            kill_worker: Some(1),
+            heartbeat_timeout: Some(std::time::Duration::from_millis(100)),
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        // Victim out of range.
+        let c = RaptorConfig {
+            kill_worker: Some(9),
+            heartbeat_timeout: Some(std::time::Duration::from_millis(100)),
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        // Push dispatch cannot absorb a dead worker.
+        let c = RaptorConfig {
+            kill_worker: Some(0),
+            heartbeat_timeout: Some(std::time::Duration::from_millis(100)),
+            dispatch: Policy::LeastLoaded,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -53,6 +53,17 @@ pub struct RunReport {
     pub steal_bulks: u64,
     /// Tasks inside those stolen bulks.
     pub steal_tasks: u64,
+    /// Victim raids attempted, successful or not (liveness gauge: the
+    /// gap to `steal_bulks` is wasted sweeps of an empty world).
+    pub steal_attempts: u64,
+    /// Tasks reassigned off workers declared dead by the heartbeat sweep
+    /// (0 unless `cfg.heartbeat_timeout` is set and a worker stalled).
+    pub reassigned: u64,
+    /// Distinct workers declared dead during the run.
+    pub workers_lost: u64,
+    /// DAG accounting — `Some` only for runs with a `submit_dag`
+    /// submission (total/depth histogram, released, cascade-canceled).
+    pub dag: Option<crate::coordinator::dag::DagReport>,
     /// Per-shard breakdown (one entry per coordinator shard).
     pub shards: Vec<ShardReport>,
     /// Post-run trace analysis (per-stage waits, per-shard utilization,
@@ -85,6 +96,15 @@ impl Coordinator {
     /// Submit tasks (allowed before and after `start`, until `join`).
     pub fn submit(&mut self, tasks: impl IntoIterator<Item = TaskDesc>) -> anyhow::Result<u64> {
         self.inner.submit(tasks)
+    }
+
+    /// Submit a dependency DAG (see
+    /// [`ShardedCoordinator::submit_dag`]): the graph validates up
+    /// front, every task counts into `submitted` immediately, roots
+    /// dispatch now and descendants as their dependencies resolve.  At
+    /// most one DAG per run; plain `submit` bulks can ride alongside.
+    pub fn submit_dag(&mut self, tasks: Vec<crate::task::DagTask>) -> anyhow::Result<u64> {
+        self.inner.submit_dag(tasks)
     }
 
     /// Launch workers and the bulk feeder.
@@ -362,6 +382,27 @@ mod tests {
             uids.sort_unstable();
             assert_eq!(uids, (0..200).collect::<Vec<u64>>());
         }
+    }
+
+    #[test]
+    fn facade_dag_roundtrip() {
+        let mut c = Coordinator::new(RaptorConfig {
+            bulk_size: 8,
+            keep_results: true,
+            exec_time_scale: 0.0,
+            ..Default::default()
+        })
+        .unwrap();
+        let n = c
+            .submit_dag(crate::coordinator::dag::pipeline_dag(5, 8, 0.0))
+            .unwrap();
+        assert_eq!(n, 15);
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 15);
+        let d = report.dag.expect("dag report");
+        assert_eq!(d.released, 10);
+        assert_eq!(d.cascade_canceled, 0);
     }
 
     #[test]

@@ -1,0 +1,661 @@
+//! DAG scheduling and the worker-failure model.
+//!
+//! Production campaigns are pipelines, not independent bulks
+//! (featurize → dock → score → train, §I/§V), and at leadership scale
+//! partial worker failure is the normal operating regime.  This module
+//! holds the pieces the sharded coordinator composes to support both:
+//!
+//! - [`DagScheduler`]: in-degree tracking over [`DagTask`] submissions.
+//!   The collector feeds it every terminal result; it answers with the
+//!   newly *released* ready-set (descendants whose last dependency just
+//!   resolved with a matching [`Trigger`]) and the *cascade-canceled*
+//!   set (descendants that can never run because a parent resolved
+//!   against their trigger).  Cascades are transitive and resolved
+//!   entirely in here — a canceled task satisfies no trigger, so its
+//!   own dependents cancel too.
+//! - [`HeartbeatBoard`]: one relaxed tick counter per global worker,
+//!   bumped by that worker's refill/executor threads — the same
+//!   counter idiom as [`TraceSink::bump`](crate::metrics::TraceSink) —
+//!   and sampled by the collector to detect stalls.
+//! - [`InFlightRegistry`]: per-worker map of tasks handed to a worker's
+//!   buffer and not yet seen back as results.  A stale worker's slice
+//!   is drained by the collector and re-fed through the batched-retry
+//!   machinery (`Reassigned`), so a dead worker's tasks still reach a
+//!   terminal state.
+//! - [`KillSwitch`]: deterministic fault injection — one chosen worker
+//!   dies (stops pulling, swallows claimed tasks without results, stops
+//!   beating) after a fixed number of executed tasks.  This is how
+//!   tests and the CI fault-injection smoke exercise recovery.
+//!
+//! Conservation (`done + failed + canceled == submitted`) stays
+//! structural throughout: every DAG task is counted into `submitted` at
+//! submission time (released or not), cascade-cancels surface as
+//! synthesized `Canceled` results through the same collector accounting
+//! as executed tasks, and reassignment deduplicates by uid so a slow
+//! worker mistaken for dead never double-counts.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure};
+
+use crate::task::{DagTask, TaskDesc, TaskId, TaskState, Trigger};
+
+/// One task awaiting release: its descriptor, how many dependency edges
+/// are still unresolved, and whether any resolved edge already mismatched
+/// its trigger (in which case the task cancels when the count hits 0 —
+/// waiting for the remaining parents keeps sibling ordering simple and
+/// the accounting single-shot).
+struct Pending {
+    desc: TaskDesc,
+    waiting: u32,
+    edges: Vec<(TaskId, Trigger)>,
+    doomed: bool,
+}
+
+/// What one terminal result unlocked: tasks to feed into dispatch and
+/// tasks to account as `Canceled` (transitively — cancels of cancels are
+/// already folded in).
+#[derive(Debug, Default)]
+pub struct DagStep {
+    pub released: Vec<TaskDesc>,
+    pub canceled: Vec<TaskId>,
+}
+
+/// Aggregate DAG accounting for [`RunReport`](super::RunReport).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DagReport {
+    /// Total tasks submitted as part of the DAG (roots included).
+    pub total: u64,
+    /// Longest dependency chain (roots are depth 0).
+    pub max_depth: u32,
+    /// Task count per depth level, `per_depth[d]` = tasks at depth d.
+    pub per_depth: Vec<u64>,
+    /// Tasks released by dependency resolution (excludes roots).
+    pub released: u64,
+    /// Tasks canceled because a parent resolved against their trigger
+    /// (or a release could no longer be dispatched at teardown).
+    pub cascade_canceled: u64,
+}
+
+/// In-degree scheduler over a validated DAG.  Not thread-safe by design:
+/// it lives on the collector thread, which is the single place terminal
+/// states are decided.
+pub struct DagScheduler {
+    pending: HashMap<TaskId, Pending>,
+    children: HashMap<TaskId, Vec<TaskId>>,
+    depth: HashMap<TaskId, u32>,
+    report: DagReport,
+}
+
+impl DagScheduler {
+    /// Validate and index the DAG: duplicate uids, self-edges, edges to
+    /// parents outside the DAG, and cycles are all rejected up front
+    /// (Kahn's algorithm — anything a root-first sweep cannot reach is
+    /// on a cycle).  Depths are the longest path from any root.
+    pub fn new(tasks: Vec<DagTask>) -> anyhow::Result<Self> {
+        let mut pending: HashMap<TaskId, Pending> = HashMap::with_capacity(tasks.len());
+        let mut children: HashMap<TaskId, Vec<TaskId>> = HashMap::new();
+        for t in &tasks {
+            ensure!(
+                !pending.contains_key(&t.desc.uid),
+                "duplicate uid {} in DAG submission",
+                t.desc.uid
+            );
+            pending.insert(
+                t.desc.uid,
+                Pending {
+                    desc: t.desc.clone(),
+                    waiting: t.deps.len() as u32,
+                    edges: t.deps.clone(),
+                    doomed: false,
+                },
+            );
+        }
+        for t in &tasks {
+            for &(parent, _) in &t.deps {
+                ensure!(parent != t.desc.uid, "task {} depends on itself", parent);
+                ensure!(
+                    pending.contains_key(&parent),
+                    "task {} depends on {}, which is not part of the DAG",
+                    t.desc.uid,
+                    parent
+                );
+                children.entry(parent).or_default().push(t.desc.uid);
+            }
+        }
+        // Kahn sweep for cycle detection + longest-path depths.
+        let mut indeg: HashMap<TaskId, u32> =
+            pending.iter().map(|(&u, p)| (u, p.waiting)).collect();
+        let mut depth: HashMap<TaskId, u32> = HashMap::with_capacity(pending.len());
+        let mut ready: Vec<TaskId> = indeg
+            .iter()
+            .filter(|(_, &d)| d == 0)
+            .map(|(&u, _)| u)
+            .collect();
+        for &u in &ready {
+            depth.insert(u, 0);
+        }
+        let mut seen = 0usize;
+        while let Some(u) = ready.pop() {
+            seen += 1;
+            let du = depth[&u];
+            if let Some(kids) = children.get(&u) {
+                for &c in kids {
+                    let e = depth.entry(c).or_insert(0);
+                    *e = (*e).max(du + 1);
+                    let d = indeg.get_mut(&c).unwrap();
+                    *d -= 1;
+                    if *d == 0 {
+                        ready.push(c);
+                    }
+                }
+            }
+        }
+        if seen != pending.len() {
+            bail!(
+                "DAG contains a cycle ({} of {} tasks unreachable from roots)",
+                pending.len() - seen,
+                pending.len()
+            );
+        }
+        let max_depth = depth.values().copied().max().unwrap_or(0);
+        let mut per_depth = vec![0u64; max_depth as usize + 1];
+        for &d in depth.values() {
+            per_depth[d as usize] += 1;
+        }
+        let report = DagReport {
+            total: pending.len() as u64,
+            max_depth,
+            per_depth,
+            released: 0,
+            cascade_canceled: 0,
+        };
+        Ok(Self {
+            pending,
+            children,
+            depth,
+            report,
+        })
+    }
+
+    /// Total tasks in the DAG (counted into `submitted` up front).
+    pub fn total(&self) -> u64 {
+        self.report.total
+    }
+
+    /// Tasks still waiting on a parent (neither released nor canceled).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Depth of a task (0 = root), if it was part of this DAG.
+    pub fn depth_of(&self, uid: TaskId) -> Option<u32> {
+        self.depth.get(&uid).copied()
+    }
+
+    /// Remove and return the root set (in-degree 0) for initial
+    /// submission.  Uid-sorted so feeder striding is deterministic.
+    pub fn initial_ready(&mut self) -> Vec<TaskDesc> {
+        let mut roots: Vec<TaskId> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| p.waiting == 0)
+            .map(|(&u, _)| u)
+            .collect();
+        roots.sort_unstable();
+        roots
+            .into_iter()
+            .map(|u| self.pending.remove(&u).unwrap().desc)
+            .collect()
+    }
+
+    /// Resolve one terminal result.  `Done`/`Failed` satisfy edges whose
+    /// trigger matches; a mismatch (or a `Canceled` parent, which
+    /// matches nothing) dooms the child.  Children whose last edge just
+    /// resolved are either released or — if doomed — canceled, and a
+    /// cancel recurses through *its* children here, so the returned step
+    /// is transitively complete.  Unknown uids (non-DAG tasks, repeats)
+    /// are a no-op.
+    pub fn on_terminal(&mut self, uid: TaskId, state: TaskState) -> DagStep {
+        let mut step = DagStep::default();
+        let mut work: Vec<(TaskId, TaskState)> = vec![(uid, state)];
+        while let Some((parent, pstate)) = work.pop() {
+            let Some(kids) = self.children.remove(&parent) else {
+                continue;
+            };
+            for kid in kids {
+                let Some(p) = self.pending.get_mut(&kid) else {
+                    continue; // already resolved via another path
+                };
+                for &(edge_parent, trigger) in &p.edges {
+                    if edge_parent != parent {
+                        continue;
+                    }
+                    p.waiting -= 1;
+                    if !trigger.matches(pstate) {
+                        p.doomed = true;
+                    }
+                }
+                if p.waiting == 0 {
+                    let p = self.pending.remove(&kid).unwrap();
+                    if p.doomed {
+                        self.report.cascade_canceled += 1;
+                        step.canceled.push(kid);
+                        work.push((kid, TaskState::Canceled));
+                    } else {
+                        self.report.released += 1;
+                        step.released.push(p.desc);
+                    }
+                }
+            }
+        }
+        step
+    }
+
+    /// A released task could not be dispatched after all (teardown: the
+    /// feeder is gone).  Re-books it as a cascade-cancel so the report
+    /// lanes stay exact; the caller accounts the `Canceled` result and
+    /// feeds the terminal state back via [`Self::on_terminal`].
+    pub fn release_failed(&mut self, _uid: TaskId) {
+        self.report.released -= 1;
+        self.report.cascade_canceled += 1;
+    }
+
+    /// Accounting snapshot for the run report.
+    pub fn report(&self) -> DagReport {
+        self.report.clone()
+    }
+}
+
+/// Build the built-in `featurize → dock → score` pipeline DAG:
+/// `chains` independent 3-stage chains.  Featurize and score are
+/// synthetic executables (sleep-shaped stand-ins for I/O-bound stages),
+/// dock is a real docking function call over `bundle` ligands.  Both
+/// downstream edges trigger on `Done` — a failed featurize cancels the
+/// whole chain, which the conservation accounting must absorb.
+pub fn pipeline_dag(chains: u64, bundle: u32, stage_sleep_s: f64) -> Vec<DagTask> {
+    use crate::task::{DockCall, ExecCall};
+    let mut tasks = Vec::with_capacity(chains as usize * 3);
+    for i in 0..chains {
+        let (f, d, s) = (3 * i, 3 * i + 1, 3 * i + 2);
+        tasks.push(DagTask::root(TaskDesc::executable(
+            f,
+            ExecCall {
+                command: vec![],
+                sim_duration: stage_sleep_s,
+            },
+        )));
+        tasks.push(
+            DagTask::root(TaskDesc::function(
+                d,
+                DockCall {
+                    library_seed: 1,
+                    protein_seed: 2,
+                    first_ligand_id: i * bundle as u64,
+                    bundle,
+                },
+            ))
+            .after(f),
+        );
+        tasks.push(
+            DagTask::root(TaskDesc::executable(
+                s,
+                ExecCall {
+                    command: vec![],
+                    sim_duration: stage_sleep_s * 0.5,
+                },
+            ))
+            .after(d),
+        );
+    }
+    tasks
+}
+
+/// One relaxed tick counter per global worker.  Workers bump their own
+/// slot (executors once per claimed task, refill threads once per
+/// iteration); the collector samples the whole board and treats a slot
+/// that holds in-flight tasks but has not moved for
+/// `heartbeat_timeout` as dead.  Relaxed is enough: staleness detection
+/// is a watchdog, not a synchronization edge — the reassigned tasks
+/// synchronize through the queues like any other submission.
+///
+/// Contract: the timeout must exceed the longest single task (an
+/// executor does not beat *during* `run_task`), otherwise a slow worker
+/// is reassigned while alive.  That wastes work but stays correct — the
+/// collector deduplicates by uid and counts exactly one terminal result.
+#[derive(Debug)]
+pub struct HeartbeatBoard {
+    ticks: Vec<AtomicU64>,
+}
+
+impl HeartbeatBoard {
+    pub fn new(n_workers: u32) -> Self {
+        Self {
+            ticks: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn beat(&self, worker: u32) {
+        if let Some(t) = self.ticks.get(worker as usize) {
+            t.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn tick(&self, worker: u32) -> u64 {
+        self.ticks
+            .get(worker as usize)
+            .map_or(0, |t| t.load(Ordering::Relaxed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.ticks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ticks.is_empty()
+    }
+}
+
+/// Per-worker map of tasks that entered a worker's buffer and have not
+/// come back as results.  Inserted bulk-at-a-time by the refill/dispatch
+/// threads (one lock per bulk, and only when recovery is enabled — the
+/// default path never touches this); removed by the collector as results
+/// arrive, so the worker hot path takes no per-task lock.  A dead
+/// worker's slice *is* its lost-task set.
+#[derive(Debug)]
+pub struct InFlightRegistry {
+    per_worker: Vec<Mutex<HashMap<TaskId, TaskDesc>>>,
+}
+
+impl InFlightRegistry {
+    pub fn new(n_workers: u32) -> Self {
+        Self {
+            per_worker: (0..n_workers).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    pub fn insert_bulk(&self, worker: u32, tasks: &[TaskDesc]) {
+        if let Some(m) = self.per_worker.get(worker as usize) {
+            let mut m = m.lock().unwrap();
+            for t in tasks {
+                m.insert(t.uid, t.clone());
+            }
+        }
+    }
+
+    /// Collector-side: a result for `uid` arrived from `worker`.
+    /// No-op for out-of-range ids (`NO_WORKER` feeder cancels).
+    pub fn remove(&self, worker: u32, uid: TaskId) {
+        if let Some(m) = self.per_worker.get(worker as usize) {
+            m.lock().unwrap().remove(&uid);
+        }
+    }
+
+    /// Drain a (presumed dead) worker's in-flight slice for reassignment.
+    pub fn drain(&self, worker: u32) -> Vec<TaskDesc> {
+        self.per_worker
+            .get(worker as usize)
+            .map(|m| m.lock().unwrap().drain().map(|(_, t)| t).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn len(&self, worker: u32) -> usize {
+        self.per_worker
+            .get(worker as usize)
+            .map_or(0, |m| m.lock().unwrap().len())
+    }
+}
+
+/// Deterministic worker-death injection: the victim executes `after`
+/// tasks normally, then goes dead — its executors swallow every further
+/// claimed task (and any unflushed result batch) without reporting, its
+/// refill thread stops pulling, and nobody beats for it.  Exactly the
+/// observable behavior of a crashed worker process, minus the OS.
+#[derive(Debug)]
+pub struct KillSwitch {
+    victim: u32,
+    budget: AtomicI64,
+    dead: AtomicBool,
+}
+
+impl KillSwitch {
+    pub fn new(victim: u32, after: u64) -> Self {
+        Self {
+            victim,
+            budget: AtomicI64::new(after.min(i64::MAX as u64) as i64),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    pub fn victim(&self) -> u32 {
+        self.victim
+    }
+
+    /// Executor-side, once per claimed task: `true` means swallow the
+    /// task (the worker is now dead).  The claim that exhausts the
+    /// budget is the first one swallowed.
+    pub fn check(&self, worker: u32) -> bool {
+        if worker != self.victim {
+            return false;
+        }
+        if self.dead.load(Ordering::Relaxed) {
+            return true;
+        }
+        if self.budget.fetch_sub(1, Ordering::Relaxed) <= 0 {
+            self.dead.store(true, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    pub fn is_dead_for(&self, worker: u32) -> bool {
+        worker == self.victim && self.dead.load(Ordering::Relaxed)
+    }
+}
+
+/// Recovery state shared between the worker pools and the collector,
+/// allocated only when `RaptorConfig::heartbeat_timeout` is set — the
+/// default (recovery off) threads `None` and costs nothing on any hot
+/// path.
+#[derive(Debug)]
+pub struct Recovery {
+    pub board: HeartbeatBoard,
+    pub inflight: InFlightRegistry,
+    pub kill: Option<KillSwitch>,
+}
+
+impl Recovery {
+    pub fn new(n_workers: u32, kill: Option<KillSwitch>) -> Self {
+        Self {
+            board: HeartbeatBoard::new(n_workers),
+            inflight: InFlightRegistry::new(n_workers),
+            kill,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{DagTask, ExecCall};
+
+    fn exec(uid: TaskId) -> TaskDesc {
+        TaskDesc::executable(
+            uid,
+            ExecCall {
+                command: vec![],
+                sim_duration: 0.0,
+            },
+        )
+    }
+
+    #[test]
+    fn chain_releases_in_order() {
+        let tasks = vec![
+            DagTask::root(exec(0)),
+            DagTask::root(exec(1)).after(0),
+            DagTask::root(exec(2)).after(1),
+        ];
+        let mut dag = DagScheduler::new(tasks).unwrap();
+        assert_eq!(dag.total(), 3);
+        assert_eq!(dag.depth_of(2), Some(2));
+        let roots = dag.initial_ready();
+        assert_eq!(roots.len(), 1);
+        assert_eq!(roots[0].uid, 0);
+        let s = dag.on_terminal(0, TaskState::Done);
+        assert_eq!(s.released.len(), 1);
+        assert_eq!(s.released[0].uid, 1);
+        assert!(s.canceled.is_empty());
+        let s = dag.on_terminal(1, TaskState::Done);
+        assert_eq!(s.released[0].uid, 2);
+        let s = dag.on_terminal(2, TaskState::Done);
+        assert!(s.released.is_empty() && s.canceled.is_empty());
+        assert_eq!(dag.pending_len(), 0);
+        let r = dag.report();
+        assert_eq!((r.released, r.cascade_canceled), (2, 0));
+        assert_eq!(r.per_depth, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn failed_parent_cascades_unless_trigger_matches() {
+        // 0 -> 1 (OnDone), 0 -> 2 (OnFailed), 1 -> 3 (OnDone)
+        let tasks = vec![
+            DagTask::root(exec(0)),
+            DagTask::root(exec(1)).after(0),
+            DagTask::root(exec(2)).after_failed(0),
+            DagTask::root(exec(3)).after(1),
+        ];
+        let mut dag = DagScheduler::new(tasks).unwrap();
+        assert_eq!(dag.initial_ready().len(), 1);
+        let s = dag.on_terminal(0, TaskState::Failed);
+        // OnFailed edge matches -> 2 released; OnDone edge mismatches ->
+        // 1 cancels, and 3 cascades transitively in the same step.
+        assert_eq!(s.released.iter().map(|t| t.uid).collect::<Vec<_>>(), [2]);
+        let mut canceled = s.canceled.clone();
+        canceled.sort_unstable();
+        assert_eq!(canceled, [1, 3]);
+        assert_eq!(dag.pending_len(), 0);
+        let r = dag.report();
+        assert_eq!((r.released, r.cascade_canceled), (1, 2));
+    }
+
+    #[test]
+    fn diamond_waits_for_both_parents() {
+        // 0 -> {1, 2} -> 3
+        let tasks = vec![
+            DagTask::root(exec(0)),
+            DagTask::root(exec(1)).after(0),
+            DagTask::root(exec(2)).after(0),
+            DagTask::root(exec(3)).after(1).after(2),
+        ];
+        let mut dag = DagScheduler::new(tasks).unwrap();
+        dag.initial_ready();
+        let s = dag.on_terminal(0, TaskState::Done);
+        assert_eq!(s.released.len(), 2);
+        assert!(dag.on_terminal(1, TaskState::Done).released.is_empty());
+        let s = dag.on_terminal(2, TaskState::Done);
+        assert_eq!(s.released[0].uid, 3);
+    }
+
+    #[test]
+    fn doomed_diamond_waits_then_cancels_once() {
+        // 3 needs both 1 (Done) and 2 (Done); 1 fails -> 3 is doomed but
+        // only resolves (exactly once) when 2 also terminates.
+        let tasks = vec![
+            DagTask::root(exec(1)),
+            DagTask::root(exec(2)),
+            DagTask::root(exec(3)).after(1).after(2),
+        ];
+        let mut dag = DagScheduler::new(tasks).unwrap();
+        assert_eq!(dag.initial_ready().len(), 2);
+        let s = dag.on_terminal(1, TaskState::Failed);
+        assert!(s.released.is_empty() && s.canceled.is_empty());
+        let s = dag.on_terminal(2, TaskState::Done);
+        assert_eq!(s.canceled, [3]);
+        assert_eq!(dag.report().cascade_canceled, 1);
+    }
+
+    #[test]
+    fn canceled_parent_matches_no_trigger() {
+        let tasks = vec![
+            DagTask::root(exec(0)),
+            DagTask::root(exec(1)).after(0),
+            DagTask::root(exec(2)).after_failed(0),
+        ];
+        let mut dag = DagScheduler::new(tasks).unwrap();
+        dag.initial_ready();
+        let s = dag.on_terminal(0, TaskState::Canceled);
+        assert!(s.released.is_empty());
+        let mut c = s.canceled.clone();
+        c.sort_unstable();
+        assert_eq!(c, [1, 2]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        // Cycle.
+        let cyc = vec![
+            DagTask::root(exec(0)).after(1),
+            DagTask::root(exec(1)).after(0),
+        ];
+        assert!(DagScheduler::new(cyc).is_err());
+        // Self-edge.
+        assert!(DagScheduler::new(vec![DagTask::root(exec(0)).after(0)]).is_err());
+        // Unknown parent.
+        assert!(DagScheduler::new(vec![DagTask::root(exec(0)).after(9)]).is_err());
+        // Duplicate uid.
+        let dup = vec![DagTask::root(exec(0)), DagTask::root(exec(0))];
+        assert!(DagScheduler::new(dup).is_err());
+    }
+
+    #[test]
+    fn pipeline_dag_shape() {
+        let tasks = pipeline_dag(4, 8, 0.0);
+        assert_eq!(tasks.len(), 12);
+        let mut dag = DagScheduler::new(tasks).unwrap();
+        assert_eq!(dag.report().max_depth, 2);
+        assert_eq!(dag.report().per_depth, vec![4, 4, 4]);
+        assert_eq!(dag.initial_ready().len(), 4);
+    }
+
+    #[test]
+    fn kill_switch_trips_after_budget() {
+        let k = KillSwitch::new(3, 2);
+        assert!(!k.check(1)); // wrong worker, never trips
+        assert!(!k.check(3));
+        assert!(!k.check(3));
+        assert!(k.check(3)); // third claim exhausts after=2
+        assert!(k.is_dead_for(3));
+        assert!(!k.is_dead_for(1));
+        assert!(k.check(3)); // stays dead
+    }
+
+    #[test]
+    fn registry_tracks_and_drains() {
+        let reg = InFlightRegistry::new(2);
+        reg.insert_bulk(0, &[exec(1), exec(2)]);
+        reg.insert_bulk(1, &[exec(3)]);
+        reg.remove(0, 1);
+        reg.remove(7, 99); // out of range: no-op
+        assert_eq!(reg.len(0), 1);
+        let mut lost: Vec<_> = reg.drain(0).into_iter().map(|t| t.uid).collect();
+        lost.sort_unstable();
+        assert_eq!(lost, [2]);
+        assert_eq!(reg.len(0), 0);
+        assert_eq!(reg.len(1), 1);
+    }
+
+    #[test]
+    fn heartbeat_board_counts_per_worker() {
+        let b = HeartbeatBoard::new(2);
+        b.beat(0);
+        b.beat(0);
+        b.beat(1);
+        b.beat(9); // out of range: no-op
+        assert_eq!((b.tick(0), b.tick(1)), (2, 1));
+        assert_eq!(b.len(), 2);
+    }
+}

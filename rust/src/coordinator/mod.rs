@@ -54,12 +54,15 @@
 //!    most-loaded sibling with non-zero backlog, ties to the lowest
 //!    index;
 //! 3. ONE non-blocking `try_pull_bulk` on the victim — steals are
-//!    bulk-granular, thief-counted ([`worker::StealCounters`]), and the
-//!    thief never parks on (or spins over) a queue it does not own; a
-//!    lost race re-sweeps from step 1;
-//! 4. nothing anywhere: park on home with a short timeout
-//!    (`STEAL_POLL`, 1 ms) and re-sweep — bounded steal latency, no
-//!    busy-wait.
+//!    bulk-granular, thief-counted ([`worker::StealCounters`], which
+//!    also counts *attempts* as a liveness gauge), and the thief never
+//!    parks on (or spins over) a queue it does not own;
+//! 4. whether the raid hit, missed (the backlog snapshot can race a
+//!    producer mid-write), or no victim existed: park on home with a
+//!    short timeout (`STEAL_POLL`, 1 ms) before re-sweeping from
+//!    step 1 — bounded steal latency, no busy-wait.  The park is
+//!    unconditional on a miss; re-sweeping immediately on a stale
+//!    backlog snapshot is a busy-spin.
 //!
 //! Single-shard and `steal: false` runs never probe: they keep the plain
 //! blocking pull, so the measured lock-free hot path is unchanged.
@@ -163,6 +166,48 @@
 //! pathologically skewed shard workloads (steals on and off) — against
 //! **both** queue implementations.
 //!
+//! # DAG scheduling and the failure model
+//!
+//! Production campaigns are pipelines (featurize → dock → score, §I/§V),
+//! so tasks can be submitted as a dependency DAG
+//! ([`coordinator::Coordinator::submit_dag`], `dock --dag pipeline`):
+//! each [`crate::task::DagTask`] wraps a plain [`crate::task::TaskDesc`]
+//! plus `(parent, trigger)` edges, where the [`crate::task::Trigger`] is
+//! conditional — run-if-parent-`Done` (the default) or
+//! run-if-parent-`Failed` (cleanup/triage stages).
+//!
+//! The design keeps the dispatch path DAG-free: the [`dag::DagScheduler`]
+//! lives on `join`'s collector thread — the single place terminal states
+//! are decided — tracking in-degrees and releasing a child the moment its
+//! last edge resolves with a matching trigger.  Released descriptors are
+//! flushed (non-blocking, least-backlogged-first, same machinery as
+//! retries) into the shard queues, where they are ordinary tasks:
+//! queues, buffers, executors and stealing are untouched.  A parent that
+//! resolves *against* a child's trigger (including `Canceled`, which
+//! matches nothing) dooms the child: once its remaining edges resolve it
+//! is cascade-canceled, transitively, with a synthesized `Canceled`
+//! result per descendant.
+//!
+//! **Worker-death recovery** (off by default; `--heartbeat-ms N`):
+//! workers bump a per-worker tick on a [`dag::HeartbeatBoard`] (refill
+//! iterations and executor claims); the collector sweeps the board a few
+//! times per timeout.  A worker whose tick has not moved for the timeout
+//! *while holding entries in the [`dag::InFlightRegistry`]* is declared
+//! dead: its in-flight slice is drained and re-flushed through the
+//! batched-retry machinery (`Reassigned` trace events), so a mid-DAG
+//! death neither hangs the run nor strands dependents — reassigned
+//! parents complete elsewhere and their children release normally.
+//! Detection is deliberately conservative in one direction only: the
+//! timeout must exceed the longest single task (executors beat *between*
+//! tasks); a too-short timeout wastes duplicate work but stays correct,
+//! because the collector deduplicates by uid and counts exactly one
+//! terminal result per reassigned task.  Conservation is unchanged and
+//! structural: every DAG task counts into `submitted` at submission
+//! time, and cascade-cancels/reassignments surface through the same
+//! single-collector accounting as executed tasks.  Deterministic fault
+//! injection for tests/CI lives in [`dag::KillSwitch`]
+//! (`--kill-worker GID --kill-after N`).
+//!
 //! # Task-lifecycle event model (tracing)
 //!
 //! With [`config::RaptorConfig::trace`] enabled (`dock --trace`), every
@@ -183,10 +228,13 @@
 //!                                                             arg = lane)
 //! ```
 //!
-//! plus three off-path kinds: `Steal` / `Refill` (bulk transport),
-//! `RetryFlushStall` (collector back-off), and `QueueDepth` — a
-//! *sampled* gauge of `backlog_bulks`, recorded every N-th refill
-//! ([`crate::metrics::TraceConfig::depth_sample`]).
+//! plus the off-path kinds: `Steal` / `Refill` (bulk transport),
+//! `RetryFlushStall` (collector back-off), `QueueDepth` — a *sampled*
+//! gauge of `backlog_bulks`, recorded every N-th refill
+//! ([`crate::metrics::TraceConfig::depth_sample`]) — and the DAG/
+//! recovery kinds: `Released` (dependency resolved, arg = DAG depth),
+//! `CascadeCanceled`, `Heartbeat` (refill-path board ticks) and
+//! `Reassigned` (arg = the dead worker's id).
 //!
 //! The contract the tests lean on:
 //!
@@ -227,11 +275,14 @@
 //! * [`partition::Partition`] — node partitioning across coordinators
 //!   (§III design choice 3), now wired into real-mode construction;
 //! * [`dispatch`] — the dispatch policies, the refill hysteresis, and
-//!   steal victim selection ([`dispatch::pick_victim`]).
+//!   steal victim selection ([`dispatch::pick_victim`]);
+//! * [`dag`] — the DAG scheduler, heartbeat board, in-flight registry
+//!   and kill switch (see "DAG scheduling and the failure model" above).
 
 pub mod config;
 #[allow(clippy::module_inception)]
 pub mod coordinator;
+pub mod dag;
 pub mod dispatch;
 pub mod partition;
 pub mod queue;
@@ -241,6 +292,10 @@ pub mod worker;
 
 pub use config::{EngineKind, RaptorConfig};
 pub use coordinator::{Coordinator, ResultCallback, RunReport};
+pub use dag::{
+    pipeline_dag, DagReport, DagScheduler, DagStep, HeartbeatBoard, InFlightRegistry, KillSwitch,
+    Recovery,
+};
 pub use dispatch::{
     pick_victim, refill_watermark, should_refill, Dispatcher, Policy, DEFAULT_BULK,
     REFILL_FRACTION,

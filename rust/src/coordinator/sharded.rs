@@ -52,10 +52,11 @@ use crate::metrics::trace::NO_SHARD;
 use crate::metrics::{
     analyze, StreamMetrics, TaskClass, Timeline, TraceKind, TraceScope, TraceSink,
 };
-use crate::task::{TaskDesc, TaskResult, TaskState, NO_WORKER};
+use crate::task::{DagTask, TaskDesc, TaskId, TaskResult, TaskState, NO_WORKER};
 
 use super::config::RaptorConfig;
 use super::coordinator::{ResultCallback, RunReport};
+use super::dag::{DagScheduler, KillSwitch, Recovery};
 use super::partition::Partition;
 use super::queue::{TaskQueue, TryPushError};
 use super::worker::{StealCounters, WorkerPool};
@@ -94,6 +95,10 @@ pub struct ShardReport {
     /// (thief-attributed).
     pub steal_bulks: u64,
     pub steal_tasks: u64,
+    /// Victim raids this shard's workers *attempted* (successful or
+    /// not).  Bounded-liveness gauge: attempts far above `steal_bulks`
+    /// mean thieves are sweeping a world with nothing to take.
+    pub steal_attempts: u64,
 }
 
 /// Coordinator states.
@@ -119,6 +124,13 @@ pub struct ShardedCoordinator {
     results_tx: Option<Sender<Vec<TaskResult>>>,
     pools: Vec<WorkerPool>,
     steals: Vec<Arc<StealCounters>>,
+    /// DAG scheduler for this run (at most one DAG per run; `None` for
+    /// plain bulk submissions).  Taken by `join`, which drives it from
+    /// the collector loop.
+    dag: Option<DagScheduler>,
+    /// Worker-death recovery state, allocated only under
+    /// `cfg.heartbeat_timeout` — `None` keeps every hot path untouched.
+    recovery: Option<Arc<Recovery>>,
     feeder: Option<std::thread::JoinHandle<()>>,
     callback: Option<ResultCallback>,
     tracer: Arc<TraceSink>,
@@ -139,6 +151,12 @@ impl ShardedCoordinator {
             &cfg.trace,
             partition.n_coordinators() as usize,
         ));
+        let recovery = cfg.heartbeat_timeout.map(|_| {
+            Arc::new(Recovery::new(
+                partition.total_workers(),
+                cfg.kill_worker.map(|v| KillSwitch::new(v, cfg.kill_after)),
+            ))
+        });
         Ok(Self {
             cfg,
             partition,
@@ -150,6 +168,8 @@ impl ShardedCoordinator {
             results_tx: Some(results_tx),
             pools: Vec::new(),
             steals: Vec::new(),
+            dag: None,
+            recovery,
             feeder: None,
             callback: None,
             tracer,
@@ -189,6 +209,39 @@ impl ShardedCoordinator {
         Ok(n)
     }
 
+    /// Submit a dependency DAG.  The graph is validated up front
+    /// (cycles, unknown parents, duplicate uids all reject), EVERY task
+    /// — released or not — is counted into `submitted` immediately so
+    /// conservation stays structural (a task later cascade-canceled
+    /// still balances the ledger), and the in-degree-zero root set goes
+    /// through the normal submit path.  Non-root tasks are released by
+    /// `join`'s collector as their dependencies resolve.  At most one
+    /// DAG per run; plain `submit` bulks can ride alongside it.
+    pub fn submit_dag(&mut self, tasks: Vec<DagTask>) -> anyhow::Result<u64> {
+        anyhow::ensure!(
+            self.dag.is_none(),
+            "a DAG is already scheduled for this run"
+        );
+        let tx = self
+            .submit_tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("coordinator already joined"))?;
+        let mut dag = DagScheduler::new(tasks)?;
+        let total = dag.total();
+        self.submitted.fetch_add(total, Ordering::SeqCst);
+        let mut tr = self.tracer.scope(NO_SHARD, NO_WORKER, self.t0);
+        for t in dag.initial_ready() {
+            tr.rec(
+                TraceKind::Released,
+                t.uid,
+                dag.depth_of(t.uid).unwrap_or(0) as u64,
+            );
+            tx.send(t).map_err(|_| anyhow::anyhow!("feeder gone"))?;
+        }
+        self.dag = Some(dag);
+        Ok(total)
+    }
+
     /// Launch every shard's worker pool and the striding bulk feeder.
     pub fn start(&mut self) -> anyhow::Result<()> {
         anyhow::ensure!(self.phase == Phase::Created, "already started");
@@ -210,6 +263,7 @@ impl ShardedCoordinator {
                 self.t0,
                 steals.clone(),
                 self.tracer.clone(),
+                self.recovery.clone(),
             ));
             self.steals.push(steals);
         }
@@ -298,12 +352,22 @@ impl ShardedCoordinator {
     /// counted at this single collector regardless of which shard (or
     /// thief) executed each task.  Every submitted task produces exactly
     /// one terminal result — from an executor, from the feeder (a closed
-    /// queue refused it after `stop`), or from the retry bookkeeping
-    /// below (retry impossible after `stop`).
+    /// queue refused it after `stop`), from the retry bookkeeping below
+    /// (retry impossible after `stop`), from a DAG cascade-cancel (a
+    /// parent resolved against the child's trigger, or a release could
+    /// no longer be dispatched), or from worker-death reassignment
+    /// (dedup-filtered by uid so a slow worker mistaken for dead never
+    /// double-counts).
     pub fn join(&mut self) -> anyhow::Result<RunReport> {
         anyhow::ensure!(self.phase == Phase::Started, "not started");
         // No more submissions: dropping the sender lets the feeder drain.
         drop(self.submit_tx.take());
+        // The DAG (if any) is driven from this collector loop: released
+        // tasks bypass the feeder — its fixed-size bulk batching would
+        // strand a partial ready-set until shutdown — and instead ride
+        // the same non-blocking least-backlogged flush as retries,
+        // straight into the sharded two-level dispatch.
+        let mut dag = self.dag.take();
 
         /// Terminal-state accounting shared by the receive loop and the
         /// abandoned-retry paths, tallied globally and per shard.
@@ -384,6 +448,70 @@ impl ShardedCoordinator {
             }
         }
 
+        /// Feed one *counted* terminal into the DAG scheduler: newly
+        /// released children are buffered for the queue flush, cascade
+        /// cancels are accounted as synthesized `Canceled` results on
+        /// the spot.  Transitive cascades are already folded into the
+        /// step by `DagScheduler::on_terminal`, so no recursion here.
+        #[allow(clippy::too_many_arguments)]
+        fn drive_dag(
+            dag: &mut Option<DagScheduler>,
+            uid: TaskId,
+            state: TaskState,
+            release_buf: &mut Vec<TaskDesc>,
+            acc: &mut Acc,
+            callback: &mut Option<ResultCallback>,
+            tr: &mut TraceScope,
+            t0: Instant,
+        ) -> anyhow::Result<()> {
+            let Some(d) = dag.as_mut() else {
+                return Ok(());
+            };
+            let step = d.on_terminal(uid, state);
+            for kid in step.canceled {
+                tr.rec(TraceKind::CascadeCanceled, kid, 0);
+                let now = t0.elapsed().as_secs_f64();
+                acc.terminal(TaskResult::canceled(kid, now, NO_WORKER), None, callback, tr)?;
+            }
+            for desc in step.released {
+                let depth = d.depth_of(desc.uid).unwrap_or(0) as u64;
+                tr.rec(TraceKind::Released, desc.uid, depth);
+                release_buf.push(desc);
+            }
+            Ok(())
+        }
+
+        /// Outcome of a non-blocking bulk flush against the shard
+        /// queues, least-backlogged first.
+        enum Flush {
+            /// Some queue took the bulk; payload is its shard index.
+            Accepted(usize),
+            /// Every open queue answered Full — re-buffer and back off.
+            AllFull(Vec<TaskDesc>),
+            /// Every queue is closed: the tasks can never run.
+            AllClosed(Vec<TaskDesc>),
+        }
+        fn flush_bulk(queues: &[Arc<TaskQueue<TaskDesc>>], mut tasks: Vec<TaskDesc>) -> Flush {
+            let mut order: Vec<usize> = (0..queues.len()).collect();
+            order.sort_by_key(|&i| queues[i].backlog_bulks());
+            let mut any_open = false;
+            for i in order {
+                match queues[i].try_push_bulk(tasks) {
+                    Ok(()) => return Flush::Accepted(i),
+                    Err(TryPushError::Full(t)) => {
+                        any_open = true;
+                        tasks = t;
+                    }
+                    Err(TryPushError::Closed(t)) => tasks = t,
+                }
+            }
+            if any_open {
+                Flush::AllFull(tasks)
+            } else {
+                Flush::AllClosed(tasks)
+            }
+        }
+
         let rx = self.results_rx.take().unwrap();
         let expected = || self.submitted.load(Ordering::SeqCst);
         // The collector's trace scope: Collected / RetryFlushStall events
@@ -422,36 +550,53 @@ impl ShardedCoordinator {
         let mut backoff = RETRY_BACKOFF_MIN;
         let mut next_flush = Instant::now();
         let mut retry_flush_stalls: u64 = 0;
+        // Released DAG tasks awaiting injection into a shard queue; they
+        // share the retry flush's gate and backoff.
+        let mut release_buf: Vec<TaskDesc> = Vec::new();
+        // Worker-death detection (only under cfg.heartbeat_timeout): the
+        // board is swept a few times per timeout, so detection latency
+        // stays a fraction of the timeout itself.
+        let recovery = self.recovery.clone();
+        let hb = self
+            .cfg
+            .heartbeat_timeout
+            .map(|t| (t, (t / 4).max(Duration::from_millis(1))));
+        let total_workers = self.partition.total_workers();
+        let mut last_tick = vec![0u64; total_workers as usize];
+        let mut last_change = vec![Instant::now(); total_workers as usize];
+        let mut next_hb_check = Instant::now();
+        // uid -> whether a terminal result was already counted.  A
+        // reassigned task can produce two results (the "dead" worker was
+        // merely slow and finished anyway); exactly one counts, the rest
+        // are discarded at every ingress point.
+        let mut reassigned: std::collections::HashMap<TaskId, bool> =
+            std::collections::HashMap::new();
+        let mut reassigned_count: u64 = 0;
+        let mut workers_lost: std::collections::HashSet<u32> = std::collections::HashSet::new();
+        fn already_counted(reassigned: &std::collections::HashMap<TaskId, bool>, uid: TaskId) -> bool {
+            matches!(reassigned.get(&uid), Some(true))
+        }
+        fn mark_counted(reassigned: &mut std::collections::HashMap<TaskId, bool>, uid: TaskId) {
+            if let Some(c) = reassigned.get_mut(&uid) {
+                *c = true;
+            }
+        }
         while acc.received < expected() {
-            if !retry_buf.is_empty() && Instant::now() >= next_flush {
+            let flush_due = Instant::now() >= next_flush;
+            if !retry_buf.is_empty() && flush_due {
                 let (results, tasks): (Vec<TaskResult>, Vec<TaskDesc>) =
                     retry_buf.drain(..).unzip();
-                let mut order: Vec<usize> = (0..self.n_shards()).collect();
-                order.sort_by_key(|&i| self.queues[i].backlog_bulks());
-                let mut pending = Some(tasks);
-                let mut any_open = false;
-                for i in order {
-                    let Some(tasks) = pending.take() else { break };
-                    match self.queues[i].try_push_bulk(tasks) {
-                        Ok(()) => {}
-                        Err(TryPushError::Full(t)) => {
-                            any_open = true;
-                            pending = Some(t);
-                        }
-                        Err(TryPushError::Closed(t)) => pending = Some(t),
-                    }
-                }
-                match pending {
+                match flush_bulk(&self.queues, tasks) {
                     // Some queue accepted the bulk: the retries are in
                     // flight again.
-                    None => {
+                    Flush::Accepted(_) => {
                         backoff = RETRY_BACKOFF_MIN;
                     }
                     // Every queue full (workers are pulling, so more
                     // results — and another flush chance — are on the
                     // way): re-pair and back off; an immediate retry
                     // would just contend on the queues being drained.
-                    Some(tasks) if any_open => {
+                    Flush::AllFull(tasks) => {
                         retry_buf = results.into_iter().zip(tasks).collect();
                         retry_flush_stalls += 1;
                         tr.rec(TraceKind::RetryFlushStall, 0, retry_buf.len() as u64);
@@ -459,37 +604,164 @@ impl ShardedCoordinator {
                         backoff = (backoff * 2).min(RETRY_BACKOFF_MAX);
                     }
                     // Every queue closed by `stop`: the retries can never
-                    // run, so the buffered failures are terminal.
-                    Some(_) => {
+                    // run, so the stored results are terminal.  The
+                    // dedup filter also guards this path — a reassigned
+                    // task's stored `Canceled` fallback must not count
+                    // if its real result already landed.
+                    Flush::AllClosed(_) => {
                         backoff = RETRY_BACKOFF_MIN;
                         for r in results {
+                            if already_counted(&reassigned, r.uid) {
+                                continue;
+                            }
+                            mark_counted(&mut reassigned, r.uid);
+                            let (uid, state) = (r.uid, r.state);
                             let shard = self.partition.shard_of_worker(r.worker);
                             acc.terminal(r, shard, &mut self.callback, &mut tr)?;
+                            drive_dag(
+                                &mut dag,
+                                uid,
+                                state,
+                                &mut release_buf,
+                                &mut acc,
+                                &mut self.callback,
+                                &mut tr,
+                                self.t0,
+                            )?;
                         }
                     }
                 }
-                if acc.received >= expected() {
-                    break;
+            }
+            if !release_buf.is_empty() && flush_due {
+                let tasks = std::mem::take(&mut release_buf);
+                let uids: Vec<u64> = if tr.on() {
+                    tasks.iter().map(|t| t.uid).collect()
+                } else {
+                    Vec::new()
+                };
+                match flush_bulk(&self.queues, tasks) {
+                    // Released tasks bypass the feeder, so the Submitted
+                    // and Enqueued lanes are recorded here — once, on
+                    // the flush that lands — keeping trace-side
+                    // conservation exact.
+                    Flush::Accepted(shard) => {
+                        backoff = RETRY_BACKOFF_MIN;
+                        for uid in uids {
+                            tr.rec(TraceKind::Submitted, uid, 0);
+                            tr.rec_at(TraceKind::Enqueued, uid, 0, shard as u16, NO_WORKER);
+                        }
+                    }
+                    Flush::AllFull(tasks) => {
+                        release_buf = tasks;
+                        retry_flush_stalls += 1;
+                        tr.rec(TraceKind::RetryFlushStall, 0, release_buf.len() as u64);
+                        next_flush = Instant::now() + backoff;
+                        backoff = (backoff * 2).min(RETRY_BACKOFF_MAX);
+                    }
+                    // Every queue closed (`stop` landed): the released
+                    // tasks can never run — they resolve as cascade
+                    // cancels, possibly dooming further descendants
+                    // (pushed back into `release_buf` and absorbed by
+                    // the next sweep or the post-loop drain).
+                    Flush::AllClosed(tasks) => {
+                        backoff = RETRY_BACKOFF_MIN;
+                        for task in tasks {
+                            if let Some(d) = dag.as_mut() {
+                                d.release_failed(task.uid);
+                            }
+                            tr.rec(TraceKind::CascadeCanceled, task.uid, 0);
+                            let now = self.t0.elapsed().as_secs_f64();
+                            let uid = task.uid;
+                            acc.terminal(
+                                TaskResult::canceled(uid, now, NO_WORKER),
+                                None,
+                                &mut self.callback,
+                                &mut tr,
+                            )?;
+                            drive_dag(
+                                &mut dag,
+                                uid,
+                                TaskState::Canceled,
+                                &mut release_buf,
+                                &mut acc,
+                                &mut self.callback,
+                                &mut tr,
+                                self.t0,
+                            )?;
+                        }
+                    }
                 }
             }
-            // Receive the next result-bulk.  With retries pending, bound
-            // the wait by the flush deadline: a plain recv could park
-            // forever when the only outstanding tasks are the buffered
-            // retries themselves.
-            let bulk = if retry_buf.is_empty() {
-                match rx.recv() {
+            if acc.received >= expected() {
+                break;
+            }
+            // Heartbeat sweep: a worker whose tick has not moved for the
+            // timeout *while holding in-flight tasks* is declared dead;
+            // its registry slice is reassigned through the batched-retry
+            // machinery.  The stored `Canceled` result is the terminal
+            // fallback if every queue closes before the flush lands.
+            if let (Some(rec), Some((timeout, interval))) = (recovery.as_ref(), hb) {
+                if Instant::now() >= next_hb_check {
+                    next_hb_check = Instant::now() + interval;
+                    for w in 0..total_workers {
+                        let tick = rec.board.tick(w);
+                        let wi = w as usize;
+                        if tick != last_tick[wi] {
+                            last_tick[wi] = tick;
+                            last_change[wi] = Instant::now();
+                        } else if last_change[wi].elapsed() >= timeout && rec.inflight.len(w) > 0
+                        {
+                            let lost = rec.inflight.drain(w);
+                            if lost.is_empty() {
+                                continue;
+                            }
+                            workers_lost.insert(w);
+                            let now = self.t0.elapsed().as_secs_f64();
+                            for desc in lost {
+                                tr.rec(TraceKind::Reassigned, desc.uid, w as u64);
+                                reassigned.entry(desc.uid).or_insert(false);
+                                reassigned_count += 1;
+                                retry_buf.push((TaskResult::canceled(desc.uid, now, w), desc));
+                            }
+                        }
+                    }
+                }
+            }
+            // Receive the next result-bulk.  The wait is bounded by
+            // whichever deadline comes first: the retry/release flush (a
+            // plain recv could park forever when the only outstanding
+            // tasks are the buffered ones), or the next heartbeat sweep.
+            // With neither pending, a plain blocking recv.
+            let mut wait: Option<Duration> = None;
+            if !retry_buf.is_empty() || !release_buf.is_empty() {
+                wait = Some(next_flush.saturating_duration_since(Instant::now()));
+            }
+            if hb.is_some() {
+                let w = next_hb_check.saturating_duration_since(Instant::now());
+                wait = Some(wait.map_or(w, |x| x.min(w)));
+            }
+            let bulk = match wait {
+                None => match rx.recv() {
                     Ok(b) => b,
                     Err(_) => break, // all workers gone
-                }
-            } else {
-                let wait = next_flush.saturating_duration_since(Instant::now());
-                match rx.recv_timeout(wait) {
+                },
+                Some(w) => match rx.recv_timeout(w) {
                     Ok(b) => b,
-                    Err(RecvTimeoutError::Timeout) => continue, // flush due
+                    Err(RecvTimeoutError::Timeout) => continue, // flush/sweep due
                     Err(RecvTimeoutError::Disconnected) => break,
-                }
+                },
             };
             for r in bulk {
+                // Recovery bookkeeping first: whatever we decide about
+                // the result, this worker no longer holds the task.
+                if let Some(rec) = recovery.as_ref() {
+                    rec.inflight.remove(r.worker, r.uid);
+                }
+                // Duplicate execution of a reassigned task (the "dead"
+                // worker was merely slow): drop, exactly one counts.
+                if already_counted(&reassigned, r.uid) {
+                    continue;
+                }
                 // Failed task with retry budget left: buffer for
                 // resubmission instead of counting it as terminal.
                 let retryable = r.state == TaskState::Failed && r.failed_task.is_some();
@@ -507,15 +779,73 @@ impl ShardedCoordinator {
                         continue; // not terminal yet
                     }
                 }
+                mark_counted(&mut reassigned, r.uid);
+                let (uid, state) = (r.uid, r.state);
                 let shard = self.partition.shard_of_worker(r.worker);
                 acc.terminal(r, shard, &mut self.callback, &mut tr)?;
+                drive_dag(
+                    &mut dag,
+                    uid,
+                    state,
+                    &mut release_buf,
+                    &mut acc,
+                    &mut self.callback,
+                    &mut tr,
+                    self.t0,
+                )?;
             }
         }
-        // Disconnect fallback: if the channel died with retries still
-        // buffered, their stored failures are the terminal outcomes.
+        // Disconnect fallback: if the loop exited with retries still
+        // buffered, their stored results are the terminal outcomes
+        // (dedup-filtered: a reassigned task whose real result already
+        // counted leaves a stale pair behind).
         for (r, _) in retry_buf.drain(..) {
+            if already_counted(&reassigned, r.uid) {
+                continue;
+            }
+            mark_counted(&mut reassigned, r.uid);
+            let (uid, state) = (r.uid, r.state);
             let shard = self.partition.shard_of_worker(r.worker);
             acc.terminal(r, shard, &mut self.callback, &mut tr)?;
+            drive_dag(
+                &mut dag,
+                uid,
+                state,
+                &mut release_buf,
+                &mut acc,
+                &mut self.callback,
+                &mut tr,
+                self.t0,
+            )?;
+        }
+        // Releases that never reached a queue can no longer run: the
+        // loop is over, so no worker will produce their results.  They
+        // resolve as cascade cancels; each cancel may doom further
+        // descendants, which land back in `release_buf` and are absorbed
+        // by this same pop loop.
+        while let Some(task) = release_buf.pop() {
+            if let Some(d) = dag.as_mut() {
+                d.release_failed(task.uid);
+            }
+            tr.rec(TraceKind::CascadeCanceled, task.uid, 0);
+            let now = self.t0.elapsed().as_secs_f64();
+            let uid = task.uid;
+            acc.terminal(
+                TaskResult::canceled(uid, now, NO_WORKER),
+                None,
+                &mut self.callback,
+                &mut tr,
+            )?;
+            drive_dag(
+                &mut dag,
+                uid,
+                TaskState::Canceled,
+                &mut release_buf,
+                &mut acc,
+                &mut self.callback,
+                &mut tr,
+                self.t0,
+            )?;
         }
         // Every task is terminal: release the workers.  All queues close
         // together — a thief observing its home Drained may exit, but by
@@ -558,11 +888,13 @@ impl ShardedCoordinator {
                     queue_pulled,
                     steal_bulks,
                     steal_tasks,
+                    steal_attempts: self.steals[s].attempts(),
                 }
             })
             .collect();
         let steal_bulks = shards.iter().map(|s| s.steal_bulks).sum();
         let steal_tasks = shards.iter().map(|s| s.steal_tasks).sum();
+        let steal_attempts = shards.iter().map(|s| s.steal_attempts).sum();
 
         let wall_s = self.t0.elapsed().as_secs_f64();
         let util = acc
@@ -590,6 +922,10 @@ impl ShardedCoordinator {
             retry_flush_stalls,
             steal_bulks,
             steal_tasks,
+            steal_attempts,
+            reassigned: reassigned_count,
+            workers_lost: workers_lost.len() as u64,
+            dag: dag.map(|d| d.report()),
             shards,
             trace,
             trace_events,
@@ -747,6 +1083,105 @@ mod tests {
         assert_eq!(uids, (0..300).collect::<Vec<u64>>(), "one result per task");
         let (pushed, pulled) = c.queue_counts();
         assert_eq!(pushed, pulled, "queues drained even under stop");
+    }
+
+    #[test]
+    fn dag_pipeline_completes_with_dependencies() {
+        // 20 featurize -> dock -> score chains across 2 shards with
+        // stealing on: every stage completes, dependents only after
+        // their parents, and the dag report accounts the releases.
+        let cfg = RaptorConfig {
+            exec_time_scale: 0.0,
+            ..sharded_cfg(2, true)
+        };
+        let mut c = ShardedCoordinator::new(cfg).unwrap();
+        let submitted = c
+            .submit_dag(crate::coordinator::dag::pipeline_dag(20, 8, 0.001))
+            .unwrap();
+        assert_eq!(submitted, 60);
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 60);
+        assert_eq!(report.failed + report.canceled, 0);
+        let d = report.dag.as_ref().expect("dag report present");
+        assert_eq!(d.total, 60);
+        assert_eq!(d.max_depth, 2);
+        assert_eq!(d.released, 40, "dock+score stages released by resolution");
+        assert_eq!(d.cascade_canceled, 0);
+        // Exactly-once and ordering: a stage never starts before its
+        // parent finished (results carry run-relative timestamps).
+        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(uids, (0..60).collect::<Vec<u64>>());
+        let by_uid: std::collections::HashMap<u64, &TaskResult> =
+            report.results.iter().map(|r| (r.uid, r)).collect();
+        for chain in 0..20u64 {
+            let (f, d, s) = (3 * chain, 3 * chain + 1, 3 * chain + 2);
+            assert!(
+                by_uid[&d].started >= by_uid[&f].finished,
+                "dock before featurize finished (chain {chain})"
+            );
+            assert!(
+                by_uid[&s].started >= by_uid[&d].finished,
+                "score before dock finished (chain {chain})"
+            );
+        }
+    }
+
+    #[test]
+    fn second_dag_submission_rejected() {
+        let mut c = ShardedCoordinator::new(sharded_cfg(1, true)).unwrap();
+        c.submit_dag(crate::coordinator::dag::pipeline_dag(1, 8, 0.0))
+            .unwrap();
+        assert!(c
+            .submit_dag(crate::coordinator::dag::pipeline_dag(1, 8, 0.0))
+            .is_err());
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(report.done, 3);
+    }
+
+    #[test]
+    fn worker_death_recovers_and_conserves() {
+        // Worker 1 dies after 3 tasks, swallowing its buffered bulk
+        // (including unflushed results).  The heartbeat sweep detects
+        // the stall, reassigns its in-flight slice, and every task still
+        // reaches Done exactly once.
+        let cfg = RaptorConfig {
+            exec_time_scale: 1.0,
+            heartbeat_timeout: Some(Duration::from_millis(50)),
+            kill_worker: Some(1),
+            kill_after: 3,
+            ..sharded_cfg(2, true)
+        };
+        let mut c = ShardedCoordinator::new(cfg).unwrap();
+        c.submit((0..200).map(|i| {
+            TaskDesc::executable(
+                i,
+                ExecCall {
+                    command: vec![],
+                    sim_duration: 0.002,
+                },
+            )
+        }))
+        .unwrap();
+        c.start().unwrap();
+        let report = c.join().unwrap();
+        assert_eq!(
+            report.done + report.failed + report.canceled,
+            200,
+            "conservation under worker death"
+        );
+        assert_eq!(report.done, 200, "swallowed tasks reassigned and finished");
+        assert_eq!(report.workers_lost, 1);
+        assert!(report.reassigned > 0, "the dead worker held in-flight tasks");
+        let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+        uids.sort_unstable();
+        assert_eq!(
+            uids,
+            (0..200).collect::<Vec<u64>>(),
+            "exactly one counted terminal per uid"
+        );
     }
 
     #[test]

@@ -47,6 +47,7 @@ use crate::task::{TaskDesc, TaskKind, TaskResult, TaskState};
 use crate::util::rng::SplitMix64;
 
 use super::config::{EngineKind, RaptorConfig};
+use super::dag::Recovery;
 use super::dispatch::{pick_victim, refill_watermark, Dispatcher, Policy};
 use super::queue::{TaskQueue, TryPull};
 
@@ -400,6 +401,12 @@ impl<T> TaskBuffer<T> {
 pub struct StealCounters {
     pub bulks: AtomicU64,
     pub tasks: AtomicU64,
+    /// Victim `try_pull` attempts (successful or not).  The liveness
+    /// gauge for the steal loop: every attempt is followed by either a
+    /// returned bulk or a bounded park on home, so attempts grow at
+    /// most ~1/[`STEAL_POLL`] per idle worker — an unbounded climb
+    /// here means the loop regressed into a busy-spin.
+    pub attempts: AtomicU64,
 }
 
 impl StealCounters {
@@ -414,6 +421,11 @@ impl StealCounters {
             self.tasks.load(Ordering::Relaxed),
         )
     }
+
+    /// Victim pull attempts (see the field docs).
+    pub fn attempts(&self) -> u64 {
+        self.attempts.load(Ordering::Relaxed)
+    }
 }
 
 /// Fetch the next bulk for a worker of shard `home`: the home queue
@@ -425,8 +437,13 @@ impl StealCounters {
 ///    non-blocking `try_pull` on the victim (a lost race just falls
 ///    through — the thief never parks on, or spins over, a queue it
 ///    does not own);
-/// 3. nothing anywhere: park on home with a [`STEAL_POLL`] timeout and
-///    sweep again.
+/// 3. whether the raid missed or no victim existed: park on home with a
+///    [`STEAL_POLL`] timeout, then sweep again from step 1.  The park is
+///    unconditional on a miss — re-sweeping immediately on a stale
+///    backlog snapshot (a victim that keeps *looking* loaded while
+///    thieves keep losing the pull race) busy-spins a core per idle
+///    worker.  `StealCounters::attempts` counts step-2 raids so tests
+///    can assert the bound.
 ///
 /// Returns `None` — the worker's exit signal — only when the *home*
 /// queue is closed and drained.  Sibling backlog that exists at that
@@ -454,17 +471,21 @@ fn next_bulk(
         }
         let backlogs: Vec<usize> = queues.iter().map(|q| q.backlog_bulks()).collect();
         if let Some(victim) = pick_victim(&backlogs, home) {
+            steals.attempts.fetch_add(1, Ordering::Relaxed);
             if let TryPull::Bulk(b) = queues[victim].try_pull_bulk() {
                 steals.bulks.fetch_add(1, Ordering::Relaxed);
                 steals.tasks.fetch_add(b.len() as u64, Ordering::Relaxed);
                 tr.rec(TraceKind::Steal, victim as u64, b.len() as u64);
                 return Some(b);
             }
-            // Raced out or the victim drained meanwhile: re-sweep.
-            continue;
+            // Raced out or the victim drained meanwhile: fall through to
+            // the bounded home park below.  Re-sweeping immediately here
+            // busy-spins on a stale backlog snapshot whenever a victim
+            // keeps appearing loaded but loses every pull race (e.g. a
+            // bulk held mid-claim by a slow puller).
         }
-        // Every queue empty: park on home (bounded, so work appearing at
-        // a sibling is noticed within one poll).
+        // Nothing pulled this sweep: park on home (bounded, so work
+        // appearing at a sibling is noticed within one poll).
         if let Some(b) = queues[home].pull_bulk_timeout(STEAL_POLL) {
             return Some(b);
         }
@@ -505,6 +526,7 @@ impl WorkerPool {
             t0,
             Arc::new(StealCounters::new()),
             Arc::new(TraceSink::disabled()),
+            None,
         )
     }
 
@@ -522,6 +544,11 @@ impl WorkerPool {
     /// (and the steal accounting built on it) needs `TaskResult::worker`
     /// to map back to exactly one shard.
     ///
+    /// `recovery` (when heartbeat detection is on) threads the shared
+    /// heartbeat board / in-flight registry / kill switch through the
+    /// worker threads; `None` (the default) keeps every hot path exactly
+    /// as before — no extra loads, no locks.
+    ///
     /// Panics on [`Policy::Static`], which only exists for the simulator
     /// ablations (`RaptorConfig::validate` rejects it before this).
     #[allow(clippy::too_many_arguments)]
@@ -535,6 +562,7 @@ impl WorkerPool {
         t0: Instant,
         steals: Arc<StealCounters>,
         tracer: Arc<TraceSink>,
+        recovery: Option<Arc<Recovery>>,
     ) -> Self {
         assert!(home < queues.len(), "home shard out of range");
         assert!(n_workers > 0, "a shard needs workers to drain its queue");
@@ -558,12 +586,22 @@ impl WorkerPool {
                 let engine = cfg.engine;
                 let scale = cfg.exec_time_scale;
                 let tracer = tracer.clone();
+                let recovery = recovery.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("raptor-w{gid}e{e}"))
                     .spawn(move || {
                         let mut tr = tracer.scope(home as u16, gid, t0);
                         executor_loop(
-                            gid, engine, scale, &buffer, &results, &cancel, &ready, t0, &mut tr,
+                            gid,
+                            engine,
+                            scale,
+                            &buffer,
+                            &results,
+                            &cancel,
+                            &ready,
+                            t0,
+                            &mut tr,
+                            recovery.as_deref(),
                         );
                     })
                     .expect("spawning executor thread");
@@ -581,14 +619,26 @@ impl WorkerPool {
                     let cancel = cancel.clone();
                     let steals = steals.clone();
                     let tracer = tracer.clone();
+                    let recovery = recovery.clone();
                     let bulk = cfg.bulk_size;
                     let handle = std::thread::Builder::new()
                         .name(format!("raptor-w{gid}-refill"))
                         .spawn(move || {
                             let mut tr = tracer.scope(home as u16, gid, t0);
                             refill_loop(
-                                gid, &queues, home, steal, &steals, &buffer, slots, bulk,
-                                &cancel, &results, t0, &mut tr,
+                                gid,
+                                &queues,
+                                home,
+                                steal,
+                                &steals,
+                                &buffer,
+                                slots,
+                                bulk,
+                                &cancel,
+                                &results,
+                                t0,
+                                &mut tr,
+                                recovery.as_deref(),
                             );
                         })
                         .expect("spawning refill thread");
@@ -601,6 +651,7 @@ impl WorkerPool {
                 let results = results.clone();
                 let steals = steals.clone();
                 let tracer = tracer.clone();
+                let recovery = recovery.clone();
                 let seed = 0x0D15_7A7C_4E57u64 ^ n_workers as u64 ^ ((home as u64) << 32);
                 let dispatcher = Dispatcher::new(cfg.dispatch, seed);
                 let handle = std::thread::Builder::new()
@@ -608,8 +659,17 @@ impl WorkerPool {
                     .spawn(move || {
                         let mut tr = tracer.scope(home as u16, crate::task::NO_WORKER, t0);
                         dispatch_loop(
-                            &queues, home, steal, &steals, &bufs, worker_base, dispatcher,
-                            &results, t0, &mut tr,
+                            &queues,
+                            home,
+                            steal,
+                            &steals,
+                            &bufs,
+                            worker_base,
+                            dispatcher,
+                            &results,
+                            t0,
+                            &mut tr,
+                            recovery.as_deref(),
                         );
                     })
                     .expect("spawning dispatcher thread");
@@ -663,6 +723,13 @@ impl WorkerPool {
 /// sibling shard (see [`next_bulk`]).  Exits — closing the buffer so
 /// the executors can drain and stop — once the home queue is closed and
 /// empty.
+///
+/// With `recovery` on, every pulled bulk is registered in-flight for
+/// this worker *before* it enters the buffer (one lock per bulk), each
+/// iteration beats the heartbeat board, and a tripped kill switch stops
+/// the loop — a dead worker pulls nothing more; its already-buffered
+/// tasks are swallowed by the (equally dead) executors and recovered by
+/// the collector through the registry.
 #[allow(clippy::too_many_arguments)]
 fn refill_loop(
     worker_id: u32,
@@ -677,10 +744,18 @@ fn refill_loop(
     results: &Sender<Vec<TaskResult>>,
     t0: Instant,
     tr: &mut TraceScope,
+    recovery: Option<&Recovery>,
 ) {
     loop {
         if !buffer.wait_refill(slots, bulk_size, cancel) {
             break; // buffer closed (executors lost their consumer)
+        }
+        if let Some(rec) = recovery {
+            if rec.kill.as_ref().is_some_and(|k| k.is_dead_for(worker_id)) {
+                break; // dead workers stop pulling
+            }
+            rec.board.beat(worker_id);
+            tr.rec(TraceKind::Heartbeat, worker_id as u64, rec.board.tick(worker_id));
         }
         match next_bulk(queues, home, steal, steals, tr) {
             Some(tasks) => {
@@ -701,6 +776,12 @@ fn refill_loop(
                     tr.rec(TraceKind::Pulled, uid, 0);
                 }
                 tr.depth_gauge(home as u16, || queues[home].backlog_bulks() as u64);
+                if let Some(rec) = recovery {
+                    // Register before the hand-off: from here until its
+                    // result reaches the collector, the task is this
+                    // worker's liability.
+                    rec.inflight.insert_bulk(worker_id, &tasks);
+                }
                 if let Err(rejected) = buffer.push_many(tasks) {
                     // Buffer closed underneath us (teardown): conservation
                     // still holds — surface the stranded tasks as Canceled.
@@ -735,6 +816,7 @@ fn dispatch_loop(
     results: &Sender<Vec<TaskResult>>,
     t0: Instant,
     tr: &mut TraceScope,
+    recovery: Option<&Recovery>,
 ) {
     while let Some(tasks) = next_bulk(queues, home, steal, steals, tr) {
         let uids: Vec<u64> = if tr.on() {
@@ -753,6 +835,9 @@ fn dispatch_loop(
         tr.depth_gauge(home as u16, || queues[home].backlog_bulks() as u64);
         let buffered: Vec<u64> = buffers.iter().map(|b| b.len() as u64).collect();
         let w = dispatcher.choose(&buffered);
+        if let Some(rec) = recovery {
+            rec.inflight.insert_bulk(worker_base + w as u32, &tasks);
+        }
         if let Err(rejected) = buffers[w].push_many(tasks) {
             cancel_all(rejected, worker_base + w as u32, results, t0);
         } else {
@@ -813,6 +898,7 @@ fn executor_loop(
     ready: &AtomicU64,
     t0: Instant,
     tr: &mut TraceScope,
+    recovery: Option<&Recovery>,
 ) {
     // Per-executor engine bootstrap (PJRT client + artifact compile).
     let mut engine = match engine_kind {
@@ -836,6 +922,12 @@ fn executor_loop(
 
     let mut cursor = TaskCursor::new();
     let mut batch: Vec<TaskResult> = Vec::with_capacity(RESULT_BATCH);
+    // Fault injection: once the worker's kill switch trips, this slot
+    // reports nothing more — claimed tasks and unflushed results vanish,
+    // exactly as if the worker process crashed.  The collector recovers
+    // them through the in-flight registry.
+    let worker_is_dead =
+        || recovery.and_then(|r| r.kill.as_ref()).is_some_and(|k| k.is_dead_for(worker_id));
     loop {
         let task = match buffer.try_pop(&mut cursor) {
             TryPop::Task(t) => Some(t),
@@ -844,7 +936,9 @@ fn executor_loop(
                 // About to park: hand the collector what we have so its
                 // counting (and the feeder behind it) keeps moving, and
                 // flush buffered trace events for the same reason.
-                if !flush_results(&mut batch, results) {
+                if worker_is_dead() {
+                    batch.clear();
+                } else if !flush_results(&mut batch, results) {
                     buffer.close();
                     return;
                 }
@@ -853,6 +947,15 @@ fn executor_loop(
             }
         };
         let Some(task) = task else { break };
+        if let Some(rec) = recovery {
+            if rec.kill.as_ref().is_some_and(|k| k.check(worker_id)) {
+                // The claim that tripped (or followed) the kill: swallow
+                // the task, drop the batch, report nothing.
+                batch.clear();
+                continue;
+            }
+            rec.board.beat(worker_id);
+        }
         let started = t0.elapsed().as_secs_f64();
         let result = if cancel.load(Ordering::SeqCst) {
             TaskResult::canceled(task.uid, started, worker_id)
@@ -878,7 +981,9 @@ fn executor_loop(
             return;
         }
     }
-    if !flush_results(&mut batch, results) {
+    if worker_is_dead() {
+        batch.clear();
+    } else if !flush_results(&mut batch, results) {
         buffer.close();
     }
 }
@@ -1189,6 +1294,7 @@ mod tests {
             Instant::now(),
             steals.clone(),
             Arc::new(TraceSink::disabled()),
+            None,
         );
         for b in 0..3u64 {
             let bulk: Vec<TaskDesc> = (0..16)
@@ -1232,6 +1338,7 @@ mod tests {
             Instant::now(),
             steals.clone(),
             Arc::new(TraceSink::disabled()),
+            None,
         );
         q1.push_bulk((0..4).map(|i| TaskDesc::function(i, call(i * 8, 8))).collect())
             .unwrap();
@@ -1241,7 +1348,68 @@ mod tests {
         pool.join();
         assert!(rx.try_recv().is_err(), "no task may run without a steal");
         assert_eq!(steals.snapshot(), (0, 0));
+        assert_eq!(steals.attempts(), 0, "no raids with stealing off");
         assert_eq!(q1.counts(), (4, 0), "backlog untouched with stealing off");
+    }
+
+    #[test]
+    fn idle_thief_parks_instead_of_spinning() {
+        // Steal-loop liveness regression (the `continue`-on-victim-miss
+        // busy-spin): a worker whose home queue is empty and open, with a
+        // sibling holding a long-running task, must park on home between
+        // raid sweeps.  Each sweep is gated by the STEAL_POLL (1 ms) home
+        // park, so over ~300 ms of enforced idleness the raid-attempt
+        // count stays in the hundreds; the old busy-spin re-swept
+        // immediately and racked up millions.
+        let q0 = Arc::new(TaskQueue::new(QueueImpl::Ring, 8));
+        let q1 = Arc::new(TaskQueue::new(QueueImpl::Ring, 8));
+        let (tx, rx) = channel();
+        let cfg = pool_cfg(1, 1, 1.0, Policy::PullBased);
+        let steals = Arc::new(StealCounters::new());
+        let pool = WorkerPool::spawn_shard(
+            &cfg,
+            0,
+            1,
+            0,
+            Arc::new(vec![q0.clone(), q1.clone()]),
+            tx,
+            Instant::now(),
+            steals.clone(),
+            Arc::new(TraceSink::disabled()),
+            None,
+        );
+        // Hot sibling: three single-sleeper bulks.  The thief raids them
+        // all early, its only slot then sleeps ~0.3 s serially while the
+        // refill loop sweeps an empty world — every sweep must end in
+        // the 1 ms home park, not an immediate re-sweep.
+        for uid in 0..3u64 {
+            q1.push_bulk(vec![TaskDesc::executable(
+                uid,
+                crate::task::ExecCall {
+                    command: vec![],
+                    sim_duration: 0.1,
+                },
+            )])
+            .unwrap();
+        }
+        let got = recv_n(&rx, 3);
+        assert!(got.iter().all(|r| r.state == TaskState::Done));
+        q0.close();
+        q1.close();
+        pool.join();
+        let (bulks, _) = steals.snapshot();
+        assert_eq!(bulks, 3, "every sleeper bulk arrived by theft");
+        assert!(steals.attempts() >= 3, "successful raids count as attempts");
+        // ~300 ms of gated sweeps at 1 ms/park -> a few hundred attempts;
+        // leave well over an order of magnitude of slack for scheduler
+        // jitter.  A busy-spin regression (sweeping without the park
+        // whenever a backlog snapshot looks stale) lands in the millions
+        // and fails loudly.
+        assert!(
+            steals.attempts() < 10_000,
+            "steal attempts unbounded: {} (busy-spin regression)",
+            steals.attempts()
+        );
     }
 
     #[test]

@@ -16,7 +16,8 @@ use raptor::workload::{DockTimeModel, LigandLibrary};
 
 const VALUE_KEYS: &[&str] = &[
     "id", "scale", "out", "tasks", "workers", "slots", "seed", "bundle", "executors", "policy",
-    "bulk", "queue", "coordinators", "trace", "trace-sample",
+    "bulk", "queue", "coordinators", "trace", "trace-sample", "dag", "heartbeat-ms", "kill-worker",
+    "kill-after",
 ];
 
 fn main() {
@@ -51,6 +52,16 @@ USAGE:
               [--policy pull|rr|least] [--bulk B] [--queue ring|condvar]
               [--coordinators N] [--no-steal]  real docking via PJRT workers
               [--trace out.jsonl] [--trace-sample N] [--progress]
+              [--dag pipeline]                 submit N featurize→dock→score
+                                              chains as a dependency DAG (3N
+                                              tasks) instead of a flat batch
+              [--heartbeat-ms N]               worker-death detection: reassign
+                                              a stalled worker's in-flight
+                                              tasks after N ms without a beat
+              [--kill-worker GID --kill-after K]
+                                              fault injection: worker GID dies
+                                              after K tasks (implies heartbeat
+                                              1000 ms unless set)
               --trace writes raw JSONL + a .chrome.json Perfetto trace;
               --progress prints live totals (implies tracing on)
   raptor baseline [--tasks N] [--slots S]     baselines: RP-only, static, pull
@@ -136,12 +147,24 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
     let trace_out = args.get("trace").map(String::from);
     let trace_sample = args.get_parse_opt::<u64>("trace-sample")?;
     let progress = args.flag("progress");
+    let dag_mode = args.get("dag").map(String::from);
+    let heartbeat_ms = args.get_parse_opt::<u64>("heartbeat-ms")?;
+    let kill_worker = args.get_parse_opt::<u32>("kill-worker")?;
+    let kill_after: u64 = args.get_parse("kill-after", 1)?;
+    // Fault injection needs detection to converge: default the heartbeat
+    // on when a kill is requested but no timeout was given.
+    let heartbeat_timeout = heartbeat_ms
+        .or(kill_worker.map(|_| 1000))
+        .map(std::time::Duration::from_millis);
     let lib = LigandLibrary::tiny(n_tasks * bundle as u64);
     println!(
         "real-mode docking: {n_tasks} calls x {bundle} ligands on {workers} workers x {executors} executors \
          ({policy} dispatch, bulk {bulk}, {queue_impl} queue, {coordinators} coordinator shard(s), steal {})",
         if steal { "on" } else { "off" }
     );
+    if let Some(w) = kill_worker {
+        println!("fault injection: worker {w} dies after {kill_after} tasks");
+    }
     let cfg = RaptorConfig {
         n_workers: workers,
         executors_per_worker: executors,
@@ -157,11 +180,23 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
             enabled: trace_out.is_some() || progress,
             depth_sample: trace_sample.unwrap_or(TraceConfig::default().depth_sample),
         },
+        heartbeat_timeout,
+        kill_worker,
+        kill_after,
         ..Default::default()
     };
     let mut c = Coordinator::new(cfg)?;
-    let calls = lib.strided_calls(42, bundle, 0, 1);
-    c.submit(raptor::workload::calls_to_tasks(calls, 0))?;
+    if let Some(mode) = &dag_mode {
+        anyhow::ensure!(
+            mode == "pipeline",
+            "--dag supports only the built-in `pipeline` (featurize→dock→score); got {mode}"
+        );
+        let total = c.submit_dag(raptor::coordinator::pipeline_dag(n_tasks, bundle, 0.01))?;
+        println!("dag: {n_tasks} featurize→dock→score chains = {total} tasks");
+    } else {
+        let calls = lib.strided_calls(42, bundle, 0, 1);
+        c.submit(raptor::workload::calls_to_tasks(calls, 0))?;
+    }
     let t0 = std::time::Instant::now();
     c.start()?;
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -202,10 +237,22 @@ fn cmd_dock(args: &Args) -> anyhow::Result<()> {
         report.utilization.avg * 100.0,
         report.utilization.steady * 100.0
     );
+    if let Some(d) = &report.dag {
+        println!(
+            "dag: total={} max_depth={} released={} cascade_canceled={} per_depth={:?}",
+            d.total, d.max_depth, d.released, d.cascade_canceled, d.per_depth
+        );
+    }
+    if report.workers_lost > 0 || report.reassigned > 0 {
+        println!(
+            "recovery: workers_lost={} reassigned={} tasks",
+            report.workers_lost, report.reassigned
+        );
+    }
     if report.shards.len() > 1 {
         println!(
-            "steals: {} bulks / {} tasks",
-            report.steal_bulks, report.steal_tasks
+            "steals: {} bulks / {} tasks ({} attempts)",
+            report.steal_bulks, report.steal_tasks, report.steal_attempts
         );
         for s in &report.shards {
             println!(

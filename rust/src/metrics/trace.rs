@@ -98,10 +98,26 @@ pub enum TraceKind {
     RetryFlushStall = 9,
     /// Sampled shard-queue backlog (`arg` = bulks buffered).
     QueueDepth = 10,
+    /// DAG dependency resolved: the collector released a ready task into
+    /// dispatch (`uid` = released task, `arg` = its DAG depth).
+    Released = 11,
+    /// A parent resolved against a dependent's trigger: the dependent
+    /// (and transitively its descendants) terminates `Canceled` without
+    /// dispatch (`uid` = canceled task).
+    CascadeCanceled = 12,
+    /// Worker liveness tick observed on the refill path (`uid` = global
+    /// worker id, `arg` = board tick).  The authoritative signal is the
+    /// [`HeartbeatBoard`](crate::coordinator::dag::HeartbeatBoard)
+    /// counters; these events are the traceable echo.
+    Heartbeat = 13,
+    /// The collector declared a worker dead and re-fed one of its
+    /// in-flight tasks through the retry machinery (`uid` = task,
+    /// `arg` = dead worker id).
+    Reassigned = 14,
 }
 
 impl TraceKind {
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 15;
 
     pub const ALL: [TraceKind; Self::COUNT] = [
         TraceKind::Submitted,
@@ -115,6 +131,10 @@ impl TraceKind {
         TraceKind::Refill,
         TraceKind::RetryFlushStall,
         TraceKind::QueueDepth,
+        TraceKind::Released,
+        TraceKind::CascadeCanceled,
+        TraceKind::Heartbeat,
+        TraceKind::Reassigned,
     ];
 
     pub fn name(self) -> &'static str {
@@ -130,6 +150,10 @@ impl TraceKind {
             TraceKind::Refill => "refill",
             TraceKind::RetryFlushStall => "retry_flush_stall",
             TraceKind::QueueDepth => "queue_depth",
+            TraceKind::Released => "released",
+            TraceKind::CascadeCanceled => "cascade_canceled",
+            TraceKind::Heartbeat => "heartbeat",
+            TraceKind::Reassigned => "reassigned",
         }
     }
 }
@@ -690,7 +714,11 @@ pub fn to_chrome_trace(events: &[TraceEvent]) -> String {
                     ]));
                 }
             }
-            TraceKind::Steal | TraceKind::RetryFlushStall => {
+            TraceKind::Steal
+            | TraceKind::RetryFlushStall
+            | TraceKind::Released
+            | TraceKind::CascadeCanceled
+            | TraceKind::Reassigned => {
                 out.push(obj(vec![
                     ("name", Json::Str(e.kind.name().into())),
                     ("ph", Json::Str("i".into())),
@@ -927,6 +955,90 @@ mod tests {
             })
             .unwrap();
         assert_eq!(span.get("dur").unwrap().as_u64(), Some(20_000));
+    }
+
+    /// `exec_done_rate_per_s` edge cases: the middle-80 % span must
+    /// never divide by zero or index out of range.  Fewer than 2
+    /// `ExecDone`s, or a span of identical timestamps, yields 0.0 —
+    /// finite, so `BenchReport` extras and JSON export stay clean.
+    #[test]
+    fn exec_done_rate_guards_degenerate_streams() {
+        let ev = |t_ns: u64, kind, uid| TraceEvent {
+            t_ns,
+            uid,
+            arg: 0,
+            kind,
+            shard: 0,
+            worker: 0,
+            thread: 0,
+        };
+        // No ExecDone at all.
+        let a = analyze(&[ev(1, TraceKind::Submitted, 1)], &[1.0]);
+        assert_eq!(a.stages.exec_done_rate_per_s, 0.0);
+        // Exactly one completion.
+        let one = vec![ev(1, TraceKind::ExecStart, 1), ev(2, TraceKind::ExecDone, 1)];
+        let a = analyze(&one, &[1.0]);
+        assert!(a.stages.exec_done_rate_per_s.is_finite());
+        assert_eq!(a.stages.exec_done_rate_per_s, 0.0);
+        // Many completions, all at the same timestamp: span == 0.
+        let mut same = Vec::new();
+        for uid in 0..8 {
+            same.push(ev(5, TraceKind::ExecStart, uid));
+            same.push(ev(5, TraceKind::ExecDone, uid));
+        }
+        let a = analyze(&same, &[1.0]);
+        assert!(a.stages.exec_done_rate_per_s.is_finite());
+        assert_eq!(a.stages.exec_done_rate_per_s, 0.0);
+        // Stage means on the degenerate streams stay finite too.
+        for (_, v) in a.stages.means() {
+            assert!(v.is_finite(), "stage means must never be NaN/inf");
+        }
+        // Sanity: a real spread still yields a positive rate.
+        let mut spread = Vec::new();
+        for uid in 0..10u64 {
+            spread.push(ev(uid * 1_000_000, TraceKind::ExecStart, uid));
+            spread.push(ev(uid * 1_000_000 + 1, TraceKind::ExecDone, uid));
+        }
+        let a = analyze(&spread, &[1.0]);
+        assert!(a.stages.exec_done_rate_per_s > 0.0);
+    }
+
+    #[test]
+    fn new_dag_kinds_have_names_and_export() {
+        for k in [
+            TraceKind::Released,
+            TraceKind::CascadeCanceled,
+            TraceKind::Heartbeat,
+            TraceKind::Reassigned,
+        ] {
+            assert!(!k.name().is_empty());
+            assert!(TraceKind::ALL.contains(&k));
+        }
+        assert_eq!(TraceKind::ALL.len(), TraceKind::COUNT);
+        let e = |kind| TraceEvent {
+            t_ns: 1,
+            uid: 7,
+            arg: 3,
+            kind,
+            shard: 0,
+            worker: 0,
+            thread: 0,
+        };
+        let events = [
+            e(TraceKind::Released),
+            e(TraceKind::CascadeCanceled),
+            e(TraceKind::Reassigned),
+            e(TraceKind::Heartbeat),
+        ];
+        parse(to_jsonl(&events).lines().next().unwrap()).expect("jsonl parses");
+        let v = parse(&to_chrome_trace(&events)).expect("chrome parses");
+        let instants = v
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .count();
+        assert_eq!(instants, 3, "released/cascade/reassigned export as instants");
     }
 
     #[test]

@@ -151,6 +151,63 @@ impl TaskResult {
 /// without ever being assigned to a worker.
 pub const NO_WORKER: u32 = u32::MAX;
 
+/// Conditional trigger on a dependency edge: when does the child become
+/// eligible?  A parent that terminates in any *other* state (including
+/// `Canceled`, which matches neither trigger) dooms the child to a
+/// cascade-cancel — see `coordinator::dag`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// Run after the parent completes successfully (the default edge).
+    OnDone,
+    /// Run only if the parent terminally fails — cleanup/triage stages.
+    OnFailed,
+}
+
+impl Trigger {
+    /// Does a parent terminating in `state` satisfy this edge?
+    pub fn matches(self, state: TaskState) -> bool {
+        matches!(
+            (self, state),
+            (Trigger::OnDone, TaskState::Done) | (Trigger::OnFailed, TaskState::Failed)
+        )
+    }
+}
+
+/// A task plus its dependency edges — the DAG submission unit.  The
+/// wrapped [`TaskDesc`] stays dependency-free, so everything downstream
+/// of release (queues, buffers, executors, results) is untouched by DAG
+/// scheduling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagTask {
+    pub desc: TaskDesc,
+    /// (parent uid, trigger) — the parent must be part of the same DAG
+    /// submission.
+    pub deps: Vec<(TaskId, Trigger)>,
+}
+
+impl DagTask {
+    /// A task with no dependencies (a DAG root) — chain [`Self::after`] /
+    /// [`Self::after_failed`] to add edges.
+    pub fn root(desc: TaskDesc) -> Self {
+        Self {
+            desc,
+            deps: Vec::new(),
+        }
+    }
+
+    /// Add a run-if-parent-`Done` edge.
+    pub fn after(mut self, parent: TaskId) -> Self {
+        self.deps.push((parent, Trigger::OnDone));
+        self
+    }
+
+    /// Add a run-if-parent-`Failed` edge.
+    pub fn after_failed(mut self, parent: TaskId) -> Self {
+        self.deps.push((parent, Trigger::OnFailed));
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +253,34 @@ mod tests {
         .with_gpus(1);
         assert_eq!(e.gpus, 1);
         assert!(!e.kind.is_function());
+    }
+
+    #[test]
+    fn triggers_match_only_their_state() {
+        assert!(Trigger::OnDone.matches(TaskState::Done));
+        assert!(!Trigger::OnDone.matches(TaskState::Failed));
+        assert!(Trigger::OnFailed.matches(TaskState::Failed));
+        assert!(!Trigger::OnFailed.matches(TaskState::Done));
+        // Canceled satisfies neither: cancels cascade.
+        assert!(!Trigger::OnDone.matches(TaskState::Canceled));
+        assert!(!Trigger::OnFailed.matches(TaskState::Canceled));
+    }
+
+    #[test]
+    fn dag_task_builders_accumulate_edges() {
+        let t = DagTask::root(TaskDesc::executable(
+            5,
+            ExecCall {
+                command: vec![],
+                sim_duration: 0.0,
+            },
+        ))
+        .after(1)
+        .after_failed(2);
+        assert_eq!(
+            t.deps,
+            vec![(1, Trigger::OnDone), (2, Trigger::OnFailed)]
+        );
     }
 
     #[test]

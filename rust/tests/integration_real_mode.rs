@@ -5,12 +5,12 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use raptor::coordinator::{Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig};
+use raptor::coordinator::{pipeline_dag, Coordinator, EngineKind, Policy, QueueImpl, RaptorConfig};
 use raptor::metrics::trace::{to_chrome_trace, to_jsonl};
 use raptor::metrics::{TraceConfig, TraceKind};
 use raptor::runtime::{artifacts_built, DockEngine};
 use raptor::util::json::parse;
-use raptor::task::{DockCall, ExecCall, TaskDesc, TaskState};
+use raptor::task::{DagTask, DockCall, ExecCall, TaskDesc, TaskState};
 use raptor::workload::{calls_to_tasks, LigandLibrary};
 
 fn dock_task(uid: u64) -> TaskDesc {
@@ -670,4 +670,124 @@ fn retry_policy_recovers_flaky_tasks() {
     assert_eq!(report.done, 10, "flaky tasks must recover via retry");
     assert_eq!(report.failed, 1, "broken task must exhaust retries");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The built-in featurize→dock→score pipeline under `--coordinators 4`
+/// with one worker killed mid-run: the heartbeat sweep detects the
+/// death, the swallowed in-flight tasks are reassigned through the
+/// batched-retry machinery, and every chain still completes in
+/// dependency order with exact accounting.
+#[test]
+fn dag_pipeline_survives_worker_death_four_coordinators() {
+    let chains = 60u64;
+    let cfg = RaptorConfig {
+        n_workers: 8,
+        n_coordinators: 4,
+        steal: true,
+        executors_per_worker: 2,
+        bulk_size: 8,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 1.0,
+        keep_results: true,
+        heartbeat_timeout: Some(std::time::Duration::from_millis(50)),
+        kill_worker: Some(3),
+        kill_after: 3,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let n = c.submit_dag(pipeline_dag(chains, 8, 0.002)).unwrap();
+    assert_eq!(n, 3 * chains);
+    c.start().unwrap();
+    let report = c.join().unwrap();
+
+    assert_eq!(
+        report.done + report.failed + report.canceled,
+        n,
+        "conservation must survive worker death mid-DAG"
+    );
+    assert_eq!(report.done, n, "every stage completes after reassignment");
+    assert_eq!(report.workers_lost, 1, "exactly the injected death detected");
+    assert!(report.reassigned > 0, "the dead worker held in-flight tasks");
+    let d = report.dag.as_ref().expect("DAG report attached");
+    assert_eq!(d.released, 2 * chains, "dock+score released as parents finish");
+    assert_eq!(d.cascade_canceled, 0, "no failures, no cascades");
+    let mut uids: Vec<u64> = report.results.iter().map(|r| r.uid).collect();
+    uids.sort_unstable();
+    assert_eq!(uids, (0..n).collect::<Vec<u64>>(), "each uid exactly once");
+    let by_uid: std::collections::HashMap<u64, _> =
+        report.results.iter().map(|r| (r.uid, r)).collect();
+    for i in 0..chains {
+        let (f, d, s) = (&by_uid[&(3 * i)], &by_uid[&(3 * i + 1)], &by_uid[&(3 * i + 2)]);
+        assert!(
+            d.started >= f.finished - 1e-6,
+            "chain {i}: dock started before featurize finished"
+        );
+        assert!(
+            s.started >= d.finished - 1e-6,
+            "chain {i}: score started before dock finished"
+        );
+    }
+}
+
+/// Conditional triggers end to end: each chain has a root that either
+/// fails or succeeds, a success stage (`after`) and a cleanup stage
+/// (`after_failed`).  Exactly the matching branch runs; the other is
+/// cascade-canceled — never executed — and the accounting lanes are
+/// exact.
+#[test]
+fn conditional_triggers_route_failure_cleanup() {
+    let chains = 20u64;
+    let cfg = RaptorConfig {
+        n_workers: 4,
+        n_coordinators: 2,
+        steal: true,
+        executors_per_worker: 2,
+        bulk_size: 4,
+        engine: EngineKind::Synthetic,
+        exec_time_scale: 0.0,
+        keep_results: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let mut tasks = Vec::new();
+    for i in 0..chains {
+        let root = if i % 2 == 0 {
+            TaskDesc::executable(
+                3 * i,
+                ExecCall {
+                    command: vec!["/nonexistent/definitely-not-a-binary".into()],
+                    sim_duration: 0.0,
+                },
+            )
+        } else {
+            dock_task(3 * i)
+        };
+        tasks.push(DagTask::root(root));
+        tasks.push(DagTask::root(dock_task(3 * i + 1)).after(3 * i));
+        tasks.push(DagTask::root(dock_task(3 * i + 2)).after_failed(3 * i));
+    }
+    assert_eq!(c.submit_dag(tasks).unwrap(), 3 * chains);
+    c.start().unwrap();
+    let report = c.join().unwrap();
+
+    // Even chains: root Failed -> cleanup runs, success stage cascades.
+    // Odd chains: root Done -> success stage runs, cleanup cascades.
+    assert_eq!(report.failed, chains / 2, "even roots fail");
+    assert_eq!(report.done, chains / 2 + chains, "odd roots + one branch per chain");
+    assert_eq!(report.canceled, chains, "the non-matching branch cascades");
+    let d = report.dag.as_ref().expect("DAG report attached");
+    assert_eq!(d.released, chains, "exactly one branch released per chain");
+    assert_eq!(d.cascade_canceled, chains);
+    for r in &report.results {
+        let (chain, stage) = (r.uid / 3, r.uid % 3);
+        let want = match (stage, chain % 2) {
+            (0, 0) => TaskState::Failed,
+            (0, _) => TaskState::Done,
+            (1, 0) => TaskState::Canceled, // success stage of a failed root
+            (1, _) => TaskState::Done,
+            (2, 0) => TaskState::Done, // cleanup of a failed root
+            _ => TaskState::Canceled,
+        };
+        assert_eq!(r.state, want, "uid {} (chain {chain} stage {stage})", r.uid);
+    }
 }

@@ -14,7 +14,7 @@ use raptor::coordinator::{
 use raptor::metrics::{StreamMetrics, TaskClass, TraceConfig, TraceKind};
 use raptor::platform::{BatchSim, QueuePolicy, WaitShape};
 use raptor::sim::Engine;
-use raptor::task::{DockCall, ExecCall, TaskDesc};
+use raptor::task::{DagTask, DockCall, ExecCall, TaskDesc, TaskState, Trigger};
 use raptor::util::rng::SplitMix64;
 use raptor::workload::duration::probit;
 use raptor::workload::{DockTimeModel, LigandLibrary};
@@ -315,6 +315,153 @@ fn prop_sharded_conservation_under_skewed_steals() {
         assert_eq!(steal_tasks, report.steal_tasks, "steal totals drifted");
         if !steal {
             assert_eq!(report.steal_bulks, 0, "steal-off run must not steal");
+        }
+    });
+}
+
+/// DAG conservation under random dependency graphs, conditional
+/// triggers, worker death and mid-run stop: random layered DAGs (mixed
+/// instant / sleeping / failing tasks, `OnDone` and `OnFailed` edges,
+/// 1–2 parents per non-root) run on 2–3 shards with stealing on,
+/// sometimes with a kill-switch worker death under heartbeat recovery,
+/// sometimes stopped at a random time.  Always:
+/// `done + failed + canceled == submitted`, each uid exactly one
+/// terminal result, every shard queue drains, the DAG report's
+/// release/cascade accounting covers every non-root, and no dependent
+/// that actually executed started before each of its parents finished
+/// with a matching trigger.
+#[test]
+fn prop_dag_conservation_under_worker_death() {
+    prop(6, 12, |rng| {
+        let shards = 2 + rng.next_below(2) as u32; // 2..=3
+        let n_workers = shards * 2;
+        let do_stop = rng.next_below(3) == 0;
+        let kill = rng.next_below(2) == 1;
+        let cfg = RaptorConfig {
+            n_workers,
+            n_coordinators: shards,
+            steal: true,
+            executors_per_worker: 1 + rng.next_below(2) as u32,
+            bulk_size: 1 + rng.next_below(8) as usize,
+            queue_capacity: 2 + rng.next_below(6) as usize,
+            engine: EngineKind::Synthetic,
+            exec_time_scale: 1.0,
+            keep_results: true,
+            max_retries: rng.next_below(2) as u32,
+            heartbeat_timeout: Some(std::time::Duration::from_millis(50)),
+            kill_worker: if kill {
+                Some(rng.next_below(n_workers as u64) as u32)
+            } else {
+                None
+            },
+            kill_after: 1 + rng.next_below(4),
+            ..Default::default()
+        };
+
+        // Random layered DAG: contiguous uid blocks per layer, each
+        // non-root wired to 1–2 random parents in the previous layer,
+        // each edge OnFailed with probability 1/4.
+        let layers = 2 + rng.next_below(3); // 2..=4
+        let total = 60 + rng.next_below(120);
+        let mut layer_uids: Vec<Vec<u64>> = vec![Vec::new(); layers as usize];
+        for i in 0..total {
+            layer_uids[(i * layers / total) as usize].push(i);
+        }
+        let mut edges: Vec<(u64, u64, Trigger)> = Vec::new(); // (child, parent, trigger)
+        let mut dag_tasks = Vec::new();
+        for (l, uids) in layer_uids.iter().enumerate() {
+            for &uid in uids {
+                let mut t = DagTask::root(random_task(uid, rng));
+                if l > 0 {
+                    let prev = &layer_uids[l - 1];
+                    let mut parents = HashSet::new();
+                    for _ in 0..1 + rng.next_below(2) {
+                        parents.insert(prev[rng.next_below(prev.len() as u64) as usize]);
+                    }
+                    for p in parents {
+                        if rng.next_below(4) == 0 {
+                            edges.push((uid, p, Trigger::OnFailed));
+                            t = t.after_failed(p);
+                        } else {
+                            edges.push((uid, p, Trigger::OnDone));
+                            t = t.after(p);
+                        }
+                    }
+                }
+                dag_tasks.push(t);
+            }
+        }
+
+        let mut c = Coordinator::new(cfg).unwrap();
+        assert_eq!(c.submit_dag(dag_tasks).unwrap(), total);
+        c.start().unwrap();
+        let report = if do_stop {
+            std::thread::sleep(std::time::Duration::from_millis(rng.next_below(25)));
+            c.stop().unwrap()
+        } else {
+            c.join().unwrap()
+        };
+
+        assert_eq!(
+            report.done + report.failed + report.canceled,
+            total,
+            "conservation violated (shards={shards}, kill={kill}, stop={do_stop})"
+        );
+        let mut by_uid = std::collections::HashMap::new();
+        for r in &report.results {
+            assert!(
+                by_uid.insert(r.uid, r).is_none(),
+                "duplicate terminal for uid {}",
+                r.uid
+            );
+        }
+        assert_eq!(by_uid.len() as u64, total, "result count != submitted");
+        for s in &report.shards {
+            assert_eq!(
+                s.queue_pushed, s.queue_pulled,
+                "shard {} queue not drained after teardown",
+                s.shard
+            );
+        }
+
+        // Release/cascade accounting: by the time join/stop returns,
+        // every non-root was either released or cascade-canceled.
+        let d = report.dag.as_ref().expect("DAG submission yields a DAG report");
+        assert_eq!(d.total, total);
+        assert_eq!(
+            d.per_depth[0] + d.released + d.cascade_canceled,
+            total,
+            "release/cascade accounting must cover every non-root (kill={kill}, stop={do_stop})"
+        );
+        if !do_stop {
+            // A clean join cancels only through cascades: kill-switch
+            // reassignment re-executes the swallowed tasks elsewhere, so
+            // their counted terminals are real executions.
+            assert_eq!(
+                report.canceled, d.cascade_canceled,
+                "clean join: every cancel is a cascade (kill={kill})"
+            );
+        }
+
+        // Dependency ordering: a child that actually executed implies
+        // every edge matched and it started after each parent finished.
+        for &(child, parent, trig) in &edges {
+            let c_r = by_uid[&child];
+            if c_r.state == TaskState::Canceled {
+                continue;
+            }
+            let p_r = by_uid[&parent];
+            assert!(
+                trig.matches(p_r.state),
+                "child {child} ran but parent {parent} resolved {:?} against {trig:?}",
+                p_r.state
+            );
+            assert!(
+                c_r.started >= p_r.finished - 1e-6,
+                "child {child} started {:.6}s before parent {parent} finished {:.6}s",
+                c_r.started,
+                p_r.finished
+            );
         }
     });
 }
