@@ -1,0 +1,36 @@
+//! Seeded lock-hierarchy violations.  Never compiled into the crate —
+//! read as text by `audit::run_fixtures`.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+pub struct S {
+    coarse: Mutex<u32>, // rank 10 in the fixture policy
+    fine: Mutex<u32>,   // rank 20
+}
+
+impl S {
+    /// Ranks strictly increase: clean.
+    pub fn ok_nesting(&self) {
+        let _c = self.coarse.lock().unwrap();
+        let _f = self.fine.lock().unwrap();
+    }
+
+    pub fn inverted(&self) {
+        let _f = self.fine.lock().unwrap();
+        let _c = self.coarse.lock().unwrap(); //~ ERROR locks strictly increasing
+    }
+
+    pub fn blocking_under_guard(&self, rx: &Receiver<u32>) {
+        let _c = self.coarse.lock().unwrap();
+        let _ = rx.recv(); //~ ERROR locks blocking `recv`
+    }
+
+    /// The guard dies with its block before the blocking call: clean.
+    pub fn ok_after_scope(&self, rx: &Receiver<u32>) {
+        {
+            let _f = self.fine.lock().unwrap();
+        }
+        let _ = rx.recv();
+    }
+}

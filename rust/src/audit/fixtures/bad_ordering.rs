@@ -1,0 +1,28 @@
+//! Seeded atomic-ordering violations.  Never compiled into the crate —
+//! read as text by `audit::run_fixtures`.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+pub struct Ring {
+    seq: AtomicU64,
+    head: AtomicU64,
+    stray: AtomicU64,
+}
+
+impl Ring {
+    /// Every site here matches the fixture policy: no diagnostics.
+    pub fn ok_paths(&self) {
+        let _ = self.seq.load(Ordering::Acquire);
+        self.seq.store(1, Ordering::Release);
+        self.head.fetch_add(1, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+    }
+
+    pub fn violations(&self) {
+        let _ = self.seq.load(Ordering::Relaxed); //~ ERROR ordering allowed: Acquire
+        self.seq.store(2, Ordering::SeqCst); //~ ERROR ordering allowed: Release
+        let _ = self.stray.load(Ordering::Relaxed); //~ ERROR ordering undeclared
+        self.stray.store(3, Ordering::SeqCst); //~ ERROR ordering not declared
+        fence(Ordering::Acquire); //~ ERROR ordering allowed: SeqCst
+    }
+}

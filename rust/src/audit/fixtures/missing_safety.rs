@@ -1,0 +1,26 @@
+//! Seeded unsafe-audit violations.  Never compiled into the crate —
+//! read as text by `audit::run_fixtures`.
+
+use std::cell::UnsafeCell;
+
+pub struct Cell(UnsafeCell<u64>);
+
+// Missing the SAFETY prefix entirely (prose is not a contract).
+unsafe impl Sync for Cell {} //~ ERROR unsafe SAFETY:
+
+// SAFETY: this is fine, trust me — names no field at all.
+unsafe impl Send for Cell {} //~ ERROR unsafe backticks
+
+pub struct Good(UnsafeCell<u64>);
+
+// SAFETY: the `0` cell is only touched while the owning thread holds it.
+unsafe impl Send for Good {}
+
+pub fn read(c: &Cell) -> u64 {
+    unsafe { *c.0.get() } //~ ERROR unsafe SAFETY:
+}
+
+pub fn read_ok(c: &Cell) -> u64 {
+    // SAFETY: callers serialize access to `0` behind the external lock.
+    unsafe { *c.0.get() }
+}

@@ -1,0 +1,46 @@
+//! Seeded trace-completeness violations.  Never compiled into the
+//! crate — read as text by `audit::run_fixtures`.  A miniature
+//! `TraceKind` with an un-emitted variant, a variant missing from
+//! `ALL`, a variant with no `analyze()` arm, and an emission of a
+//! non-existent variant.
+
+pub enum TraceKind {
+    Emitted = 0,
+    NeverEmitted = 1,   //~ ERROR trace no emission site
+    MissingFromAll = 2, //~ ERROR trace not listed in TraceKind::ALL
+    NoAnalyzeArm = 3,   //~ ERROR trace no handler arm in analyze()
+}
+
+impl TraceKind {
+    pub const ALL: [TraceKind; 3] = [
+        TraceKind::Emitted,
+        TraceKind::NeverEmitted,
+        TraceKind::NoAnalyzeArm,
+    ];
+}
+
+pub struct Scope;
+
+impl Scope {
+    pub fn rec(&mut self, _kind: TraceKind, _uid: u64, _arg: u64) {}
+}
+
+pub fn emit(s: &mut Scope) {
+    s.rec(TraceKind::Emitted, 1, 0);
+    s.rec(TraceKind::MissingFromAll, 2, 0);
+    s.rec(TraceKind::NoAnalyzeArm, 3, 0);
+    s.rec(TraceKind::Ghost, 4, 0); //~ ERROR trace unknown
+}
+
+pub fn analyze(events: &[TraceKind]) -> usize {
+    let mut n = 0;
+    for e in events {
+        match e {
+            TraceKind::Emitted => n += 1,
+            TraceKind::NeverEmitted => n += 2,
+            TraceKind::MissingFromAll => n += 3,
+            _ => {}
+        }
+    }
+    n
+}

@@ -1,0 +1,374 @@
+//! A minimal Rust lexer for `raptor-audit` — just enough tokenization
+//! to walk call sites, brace structure, and comments without external
+//! dependencies (consistent with the offline vendored-shim policy).
+//!
+//! The lexer is intentionally shallow: it does not parse expressions or
+//! resolve names.  It produces a flat token stream with line numbers,
+//! correctly skipping the constructs that would otherwise confuse a
+//! lexical scan — string literals (including raw strings), char
+//! literals vs. lifetimes, nested block comments — and it *keeps*
+//! comments as tokens, because the unsafe-audit pass needs to see
+//! `// SAFETY:` lines in position.
+
+/// One lexical token with its 1-indexed source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: u32,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`unsafe`, `impl`, `Ordering`, field names).
+    Ident(String),
+    /// Single punctuation character: `.` `(` `)` `{` `}` `[` `]` `:` `#` ...
+    /// Multi-char operators arrive as consecutive single chars; the
+    /// passes only ever look for `::` (two `:` tokens) and single chars.
+    Punct(char),
+    /// Any literal (string, raw string, char, number).  Contents are
+    /// dropped — no pass inspects literal bodies.
+    Literal,
+    /// Lifetime marker (`'a`, `'static`).  Distinguished from char
+    /// literals so `'a'` does not desynchronize the stream.
+    Lifetime,
+    /// A `//` line comment, text after the slashes (untrimmed).
+    LineComment(String),
+    /// A `/* ... */` block comment (nesting handled), full body.
+    BlockComment(String),
+}
+
+impl TokenKind {
+    pub fn ident(&self) -> Option<&str> {
+        match self {
+            TokenKind::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(self, TokenKind::Ident(i) if i == s)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, TokenKind::Punct(p) if *p == c)
+    }
+}
+
+/// Tokenize `src`.  Never fails: unexpected bytes become `Punct` tokens,
+/// unterminated literals run to end-of-file.  Good enough for an auditor
+/// that only runs over code rustc already accepted.
+pub fn lex(src: &str) -> Vec<Token> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::with_capacity(src.len() / 6);
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    // Count newlines in bytes[start..end) into `line`.
+    fn count_nl(bytes: &[u8], start: usize, end: usize) -> u32 {
+        bytes[start..end].iter().filter(|b| **b == b'\n').count() as u32
+    }
+
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '/' if bytes.get(i + 1) == Some(&b'/') => {
+                let start = i + 2;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'\n' {
+                    j += 1;
+                }
+                toks.push(Token {
+                    kind: TokenKind::LineComment(src[start..j].to_string()),
+                    line,
+                });
+                i = j;
+            }
+            '/' if bytes.get(i + 1) == Some(&b'*') => {
+                let start = i + 2;
+                let mut depth = 1usize;
+                let mut j = start;
+                while j < bytes.len() && depth > 0 {
+                    if bytes[j] == b'/' && bytes.get(j + 1) == Some(&b'*') {
+                        depth += 1;
+                        j += 2;
+                    } else if bytes[j] == b'*' && bytes.get(j + 1) == Some(&b'/') {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                let body_end = j.saturating_sub(2).max(start);
+                toks.push(Token {
+                    kind: TokenKind::BlockComment(src[start..body_end].to_string()),
+                    line,
+                });
+                line += count_nl(bytes, i, j);
+                i = j;
+            }
+            '"' => {
+                // Cooked string: honor backslash escapes.
+                let mut j = i + 1;
+                while j < bytes.len() {
+                    match bytes[j] {
+                        b'\\' => j += 2,
+                        b'"' => {
+                            j += 1;
+                            break;
+                        }
+                        _ => j += 1,
+                    }
+                }
+                toks.push(Token {
+                    kind: TokenKind::Literal,
+                    line,
+                });
+                line += count_nl(bytes, i, j.min(bytes.len()));
+                i = j.min(bytes.len());
+            }
+            'r' if matches!(bytes.get(i + 1), Some(b'"') | Some(b'#')) && {
+                // r"..." or r#"..."# (any hash depth); r#ident is a raw
+                // identifier, not a string — require a quote after the
+                // hashes.
+                let mut k = i + 1;
+                while bytes.get(k) == Some(&b'#') {
+                    k += 1;
+                }
+                bytes.get(k) == Some(&b'"')
+            } =>
+            {
+                let mut hashes = 0usize;
+                let mut j = i + 1;
+                while bytes.get(j) == Some(&b'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                j += 1; // opening quote
+                let mut closer = Vec::with_capacity(hashes + 1);
+                closer.push(b'"');
+                closer.resize(hashes + 1, b'#');
+                while j < bytes.len() && !bytes[j..].starts_with(&closer) {
+                    j += 1;
+                }
+                j = (j + closer.len()).min(bytes.len());
+                toks.push(Token {
+                    kind: TokenKind::Literal,
+                    line,
+                });
+                line += count_nl(bytes, i, j);
+                i = j;
+            }
+            '\'' => {
+                // Lifetime ('a, 'static) vs char literal ('a', '\n').
+                // Lifetime: ident chars after the quote, no closing quote.
+                let mut j = i + 1;
+                let mut ident_len = 0usize;
+                while j < bytes.len()
+                    && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_')
+                {
+                    ident_len += 1;
+                    j += 1;
+                }
+                if ident_len > 0 && bytes.get(j) != Some(&b'\'') {
+                    toks.push(Token {
+                        kind: TokenKind::Lifetime,
+                        line,
+                    });
+                    i = j;
+                } else {
+                    // Char literal, possibly escaped.
+                    let mut j = i + 1;
+                    while j < bytes.len() {
+                        match bytes[j] {
+                            b'\\' => j += 2,
+                            b'\'' => {
+                                j += 1;
+                                break;
+                            }
+                            _ => j += 1,
+                        }
+                    }
+                    toks.push(Token {
+                        kind: TokenKind::Literal,
+                        line,
+                    });
+                    i = j.min(bytes.len());
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokenKind::Ident(src[start..i].to_string()),
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                // Numbers (including suffixes, hex, floats).  Consume
+                // the maximal run of number-ish chars; `1e-9` style
+                // exponents keep their sign.
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric()
+                        || bytes[i] == b'_'
+                        || bytes[i] == b'.'
+                            && bytes
+                                .get(i + 1)
+                                .map(|b| b.is_ascii_digit())
+                                .unwrap_or(false)
+                        || (bytes[i] == b'+' || bytes[i] == b'-')
+                            && matches!(bytes.get(i.wrapping_sub(1)), Some(b'e') | Some(b'E')))
+                {
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokenKind::Literal,
+                    line,
+                });
+            }
+            c => {
+                toks.push(Token {
+                    kind: TokenKind::Punct(c),
+                    line,
+                });
+                i += c.len_utf8();
+            }
+        }
+    }
+    toks
+}
+
+/// Token index ranges covered by `#[cfg(test)] mod ... { ... }` items.
+/// The concurrency contracts apply to shipping code; test modules spin
+/// up scratch atomics/locks that the policy table does not (and should
+/// not) describe.
+pub fn test_mod_ranges(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k < toks.len() {
+        // Match: # [ cfg ( test ) ]  (optionally more attributes)  mod ident {
+        if toks[k].kind.is_punct('#')
+            && toks.get(k + 1).map(|t| t.kind.is_punct('[')) == Some(true)
+            && toks.get(k + 2).map(|t| t.kind.is_ident("cfg")) == Some(true)
+            && toks.get(k + 3).map(|t| t.kind.is_punct('(')) == Some(true)
+            && toks.get(k + 4).map(|t| t.kind.is_ident("test")) == Some(true)
+            && toks.get(k + 5).map(|t| t.kind.is_punct(')')) == Some(true)
+            && toks.get(k + 6).map(|t| t.kind.is_punct(']')) == Some(true)
+        {
+            // Skip any further attributes / comments, then expect `mod`.
+            let mut j = k + 7;
+            loop {
+                match toks.get(j).map(|t| &t.kind) {
+                    Some(TokenKind::LineComment(_)) | Some(TokenKind::BlockComment(_)) => j += 1,
+                    Some(TokenKind::Punct('#')) => {
+                        // Another attribute: skip to its closing ].
+                        let mut depth = 0usize;
+                        j += 1;
+                        while let Some(t) = toks.get(j) {
+                            match t.kind {
+                                TokenKind::Punct('[') => depth += 1,
+                                TokenKind::Punct(']') => {
+                                    depth -= 1;
+                                    if depth == 0 {
+                                        j += 1;
+                                        break;
+                                    }
+                                }
+                                _ => (),
+                            }
+                            j += 1;
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            if toks.get(j).map(|t| t.kind.is_ident("mod")) == Some(true) {
+                // mod <name> {  — find the open brace, then its match.
+                let mut b = j + 1;
+                while let Some(t) = toks.get(b) {
+                    if t.kind.is_punct('{') {
+                        break;
+                    }
+                    if t.kind.is_punct(';') {
+                        // `mod name;` — out-of-line test module, no body.
+                        b = usize::MAX;
+                        break;
+                    }
+                    b += 1;
+                }
+                if b != usize::MAX && b < toks.len() {
+                    if let Some(close) = matching_close(toks, b, '{', '}') {
+                        out.push((k, close));
+                        k = close + 1;
+                        continue;
+                    }
+                }
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+/// True when token index `k` falls inside any of `ranges`.
+pub fn in_ranges(ranges: &[(usize, usize)], k: usize) -> bool {
+    ranges.iter().any(|(a, b)| k >= *a && k <= *b)
+}
+
+/// Next non-comment token index strictly after `k`.
+pub fn next_code(toks: &[Token], k: usize) -> Option<usize> {
+    toks.iter().enumerate().skip(k + 1).find_map(|(i, t)| {
+        (!matches!(t.kind, TokenKind::LineComment(_) | TokenKind::BlockComment(_))).then_some(i)
+    })
+}
+
+/// Previous non-comment token index strictly before `k`.
+pub fn prev_code(toks: &[Token], k: usize) -> Option<usize> {
+    (0..k).rev().find(|i| {
+        !matches!(
+            toks[*i].kind,
+            TokenKind::LineComment(_) | TokenKind::BlockComment(_)
+        )
+    })
+}
+
+/// Index of the `close` punct matching the `open` punct at `open_idx`.
+pub fn matching_close(toks: &[Token], open_idx: usize, open: char, close: char) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.kind.is_punct(open) {
+            depth += 1;
+        } else if t.kind.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Index of the `open` punct matching the `close` punct at `close_idx`,
+/// scanning backward.
+pub fn matching_open(toks: &[Token], close_idx: usize, open: char, close: char) -> Option<usize> {
+    let mut depth = 0usize;
+    for k in (0..=close_idx).rev() {
+        if toks[k].kind.is_punct(close) {
+            depth += 1;
+        } else if toks[k].kind.is_punct(open) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}

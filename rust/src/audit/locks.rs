@@ -1,0 +1,269 @@
+//! Pass 3 — lock hierarchy and blocking-under-guard.
+//!
+//! Locks are declared in the policy table with ranks; the invariant is
+//! that acquisition order is strictly increasing in rank, and that no
+//! parking/blocking primitive (`park`, `wait`, `pull_bulk`, `recv`,
+//! ...) is called while any guard is live — exactly the class of bug
+//! behind the thief busy-spin finding in the steal path.
+//!
+//! The analysis is lexical and intra-function:
+//!
+//! * a **named guard** is born at `let [mut] g = <lock>.lock().unwrap();`
+//!   (the `.unwrap()`/`.expect(..)` chain must end the statement — a
+//!   longer chain like `.lock().unwrap().len()` is a temporary whose
+//!   guard dies at the statement end and is not tracked);
+//! * a guard dies at the close of the block that declared it, at
+//!   `drop(g)`, or by being moved into `Condvar::wait(g)` /
+//!   `wait_timeout(g, ..)` — the wait idiom re-binds the returned guard
+//!   (`g = cv.wait(g).unwrap();`), which the pass models as a transfer;
+//! * `wait` itself is blocking, so waiting while *another* guard is
+//!   live is flagged even though the waited-on mutex is released.
+
+use super::lexer::{in_ranges, matching_close, matching_open, next_code, prev_code, Token, TokenKind};
+use super::policy::Policy;
+use super::Diagnostic;
+
+#[derive(Debug, Clone)]
+struct Guard {
+    name: String,
+    lock: String,
+    rank: u32,
+    depth: usize,
+}
+
+/// Check one file; returns (diagnostics, lock acquisitions, blocking calls).
+pub fn check_file(
+    file: &str,
+    toks: &[Token],
+    test_ranges: &[(usize, usize)],
+    pol: &Policy,
+) -> (Vec<Diagnostic>, usize, usize) {
+    let mut diags = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0usize;
+    let mut acquisitions = 0usize;
+    let mut blocking_calls = 0usize;
+
+    let mut k = 0usize;
+    while k < toks.len() {
+        if in_ranges(test_ranges, k) {
+            k += 1;
+            continue;
+        }
+        match &toks[k].kind {
+            TokenKind::Punct('{') => depth += 1,
+            TokenKind::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| g.depth <= depth);
+            }
+            TokenKind::Ident(name) => {
+                let line = toks[k].line;
+                // `drop(g)` kills the guard explicitly.
+                if name == "drop" {
+                    if let Some((args, _)) = call_args(toks, k) {
+                        if let Some(TokenKind::Ident(g)) = args.first().map(|t| &toks[*t].kind) {
+                            guards.retain(|gu| gu.name != *g);
+                        }
+                    }
+                }
+                // Lock acquisition: `<lock>.lock(` with <lock> ranked.
+                else if name == "lock" && is_method_call(toks, k) {
+                    if let Some(recv) = receiver_ident(toks, k) {
+                        if let Some(rank) = pol.lock_rank(file, &recv) {
+                            acquisitions += 1;
+                            for g in &guards {
+                                if g.rank >= rank {
+                                    diags.push(Diagnostic {
+                                        file: file.to_string(),
+                                        line,
+                                        pass: "locks",
+                                        msg: format!(
+                                            "acquiring `{recv}` (rank {rank}) while guard \
+                                             `{}` of `{}` (rank {}) is live; acquisition \
+                                             order must be strictly increasing in rank",
+                                            g.name, g.lock, g.rank
+                                        ),
+                                    });
+                                }
+                            }
+                            if let Some(target) = binding_target(toks, k) {
+                                guards.retain(|g| g.name != target);
+                                guards.push(Guard {
+                                    name: target,
+                                    lock: recv,
+                                    rank,
+                                    depth,
+                                });
+                            }
+                        }
+                    }
+                }
+                // Blocking primitive.
+                else if pol.is_blocking(name) && is_call(toks, k) && !is_definition(toks, k) {
+                    blocking_calls += 1;
+                    let is_wait = name == "wait" || name == "wait_timeout";
+                    // Guards moved into a wait are released for its
+                    // duration; everything else still held is a bug.
+                    let released: Vec<String> = if is_wait {
+                        let args = call_args(toks, k).map(|(a, _)| a).unwrap_or_default();
+                        guards
+                            .iter()
+                            .filter(|g| {
+                                args.iter().any(|ai| toks[*ai].kind.is_ident(&g.name))
+                            })
+                            .map(|g| g.name.clone())
+                            .collect()
+                    } else {
+                        Vec::new()
+                    };
+                    for g in &guards {
+                        if !released.contains(&g.name) {
+                            diags.push(Diagnostic {
+                                file: file.to_string(),
+                                line,
+                                pass: "locks",
+                                msg: format!(
+                                    "calling blocking `{name}` while guard `{}` of `{}` \
+                                     (rank {}) is live",
+                                    g.name, g.lock, g.rank
+                                ),
+                            });
+                        }
+                    }
+                    if let Some(moved) = released.first() {
+                        // The wait consumed the guard; transfer it to the
+                        // re-binding if the statement is `g = cv.wait(g)…;`.
+                        let old = guards
+                            .iter()
+                            .find(|g| &g.name == moved)
+                            .cloned()
+                            .expect("released guard is live");
+                        guards.retain(|g| !released.contains(&g.name));
+                        if let Some(target) = binding_target(toks, k) {
+                            guards.retain(|g| g.name != target);
+                            guards.push(Guard {
+                                name: target,
+                                lock: old.lock,
+                                rank: old.rank,
+                                depth,
+                            });
+                        }
+                    }
+                }
+            }
+            _ => (),
+        }
+        k += 1;
+    }
+    (diags, acquisitions, blocking_calls)
+}
+
+/// Is token `k` (an ident) followed by `(` — i.e. a call?
+fn is_call(toks: &[Token], k: usize) -> bool {
+    next_code(toks, k).map(|n| toks[n].kind.is_punct('(')) == Some(true)
+}
+
+/// A call with a `.` receiver (method), as opposed to a bare path call.
+fn is_method_call(toks: &[Token], k: usize) -> bool {
+    is_call(toks, k) && prev_code(toks, k).map(|p| toks[p].kind.is_punct('.')) == Some(true)
+}
+
+/// `fn name(` — a definition, not a call.
+fn is_definition(toks: &[Token], k: usize) -> bool {
+    prev_code(toks, k).map(|p| toks[p].kind.is_ident("fn")) == Some(true)
+}
+
+/// Receiver identifier of the method call at `k`: the ident before the
+/// `.`, looking through one `[..]`/`(..)` suffix group.
+fn receiver_ident(toks: &[Token], k: usize) -> Option<String> {
+    let d = prev_code(toks, k)?;
+    if !toks[d].kind.is_punct('.') {
+        return None;
+    }
+    let r = prev_code(toks, d)?;
+    match &toks[r].kind {
+        TokenKind::Ident(s) => Some(s.clone()),
+        TokenKind::Punct(']') => {
+            let open = matching_open(toks, r, '[', ']')?;
+            toks[prev_code(toks, open)?].kind.ident().map(String::from)
+        }
+        TokenKind::Punct(')') => {
+            let open = matching_open(toks, r, '(', ')')?;
+            toks[prev_code(toks, open)?].kind.ident().map(String::from)
+        }
+        _ => None,
+    }
+}
+
+/// Token indices of the top-level argument tokens of the call at `k`,
+/// plus the index of the closing paren.
+fn call_args(toks: &[Token], k: usize) -> Option<(Vec<usize>, usize)> {
+    let open = next_code(toks, k)?;
+    if !toks[open].kind.is_punct('(') {
+        return None;
+    }
+    let close = matching_close(toks, open, '(', ')')?;
+    Some(((open + 1..close).collect(), close))
+}
+
+/// If the statement containing the call at `k` has the shape
+/// `[let [mut]] <name> = <chain>.m(..)[.unwrap()|.expect(..)]* ;`
+/// return `<name>` — the binding that will own the produced guard.
+fn binding_target(toks: &[Token], k: usize) -> Option<String> {
+    // Forward: the call's result must flow unmodified to the `;` —
+    // only unwrap/expect links are allowed in between.
+    let (_, close) = call_args(toks, k)?;
+    let mut p = close;
+    loop {
+        let n = next_code(toks, p)?;
+        if toks[n].kind.is_punct(';') {
+            break;
+        }
+        if !toks[n].kind.is_punct('.') {
+            return None;
+        }
+        let m = next_code(toks, n)?;
+        match toks[m].kind.ident() {
+            Some("unwrap") | Some("expect") => {
+                let o = next_code(toks, m)?;
+                if !toks[o].kind.is_punct('(') {
+                    return None;
+                }
+                p = matching_close(toks, o, '(', ')')?;
+            }
+            _ => return None,
+        }
+    }
+    // Backward: skip the receiver chain to the statement head; accept
+    // `= <name>` with an optional `let [mut]` prefix.
+    let mut p = k;
+    loop {
+        let q = prev_code(toks, p)?;
+        match &toks[q].kind {
+            TokenKind::Punct(';') | TokenKind::Punct('{') | TokenKind::Punct('}')
+            | TokenKind::Punct(',') | TokenKind::Punct('|') => return None,
+            TokenKind::Punct('=') => {
+                // Reject `==`, `!=`, `>=`, `<=`, `+=`-style compounds.
+                let b = prev_code(toks, q)?;
+                if matches!(
+                    toks[b].kind,
+                    TokenKind::Punct('=')
+                        | TokenKind::Punct('!')
+                        | TokenKind::Punct('<')
+                        | TokenKind::Punct('>')
+                        | TokenKind::Punct('+')
+                        | TokenKind::Punct('-')
+                        | TokenKind::Punct('*')
+                        | TokenKind::Punct('/')
+                ) {
+                    return None;
+                }
+                let name = toks[b].kind.ident()?.to_string();
+                return Some(name);
+            }
+            TokenKind::Punct(')') => p = matching_open(toks, q, '(', ')')?,
+            TokenKind::Punct(']') => p = matching_open(toks, q, '[', ']')?,
+            _ => p = q,
+        }
+    }
+}

@@ -1,0 +1,435 @@
+//! `raptor-audit` — a concurrency-contract static analyzer.
+//!
+//! The lock-free dispatch core (ring queue, segmented task buffers,
+//! trace sink) rests on contracts that ThreadSanitizer can only probe
+//! dynamically: per-field atomic-ordering policy, SAFETY obligations on
+//! `unsafe`, the lock-acquisition hierarchy, and trace-event
+//! completeness.  This module enforces them *statically*, from a
+//! hand-rolled lexer ([`lexer`]) and a checked-in policy table
+//! (`rust/audit_policy.toml`, parsed by [`policy`]) — no external
+//! dependencies, consistent with the offline vendored-shim policy.
+//!
+//! Passes (one per contract):
+//! * [`ordering`] — every `Ordering::X` argument must match the policy
+//!   table's allowed set for its `(receiver, operation)` site;
+//! * [`unsafe_audit`] — every `unsafe` block/impl/fn needs an adjacent
+//!   `// SAFETY:` comment; `unsafe impl` must name the invariant field;
+//! * [`locks`] — ranked locks must be acquired in strictly increasing
+//!   rank order, and no blocking primitive may run under a live guard;
+//! * [`tracecheck`] — every `TraceKind` variant needs an emission site,
+//!   an `ALL` entry, and an explicit handler mention in `analyze()`.
+//!
+//! The `raptor-audit` binary (`src/bin/audit.rs`) runs the passes over
+//! `--root rust/src` and exits nonzero on any diagnostic; `--fixtures`
+//! instead self-tests against the seeded violations under
+//! [`fixtures`](self#fixtures) (see [`run_fixtures`]).
+//!
+//! ## Fixtures
+//!
+//! `src/audit/fixtures/` holds Rust sources that are *not* part of the
+//! crate (never `mod`-included): each seeds contract violations marked
+//! with trailing `//~ ERROR <pass>` comments, and the runner asserts an
+//! exact correspondence — every marker flagged, no diagnostic on an
+//! unmarked line.
+
+pub mod lexer;
+mod locks;
+mod ordering;
+pub mod policy;
+mod tracecheck;
+mod unsafe_audit;
+
+use std::fmt;
+use std::path::Path;
+
+use policy::Policy;
+
+/// One contract violation, `file:line: [pass] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the audit root.
+    pub file: String,
+    /// 1-indexed; 0 for file-level findings.
+    pub line: u32,
+    /// `ordering` | `unsafe` | `locks` | `trace` | `policy`.
+    pub pass: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.msg)
+    }
+}
+
+/// Audit result plus coverage counters (so a "clean" run is visibly
+/// non-vacuous: zero inspected sites would mean the scan went wrong).
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub diags: Vec<Diagnostic>,
+    pub files: usize,
+    pub atomic_sites: usize,
+    pub unsafe_sites: usize,
+    pub lock_acquisitions: usize,
+    pub blocking_calls: usize,
+    pub trace_variants: usize,
+}
+
+impl AuditReport {
+    pub fn clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} files · {} atomic sites · {} unsafe sites · {} lock acquisitions · \
+             {} blocking calls · {} trace variants · {} violation(s)",
+            self.files,
+            self.atomic_sites,
+            self.unsafe_sites,
+            self.lock_acquisitions,
+            self.blocking_calls,
+            self.trace_variants,
+            self.diags.len()
+        )
+    }
+}
+
+/// Run every pass over the policy's scope, rooted at `root`.
+pub fn audit_root(root: &Path, pol: &Policy) -> AuditReport {
+    let mut report = AuditReport::default();
+    let mut parsed: Vec<(String, Vec<lexer::Token>, Vec<(usize, usize)>)> = Vec::new();
+
+    for rel in &pol.scope {
+        let path = root.join(rel);
+        let src = match std::fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(e) => {
+                report.diags.push(Diagnostic {
+                    file: rel.clone(),
+                    line: 0,
+                    pass: "policy",
+                    msg: format!("cannot read {}: {e}", path.display()),
+                });
+                continue;
+            }
+        };
+        report.files += 1;
+        let toks = lexer::lex(&src);
+        let test_ranges = lexer::test_mod_ranges(&toks);
+
+        let (d, n) = ordering::check_file(rel, &toks, &test_ranges, pol);
+        report.diags.extend(d);
+        report.atomic_sites += n;
+
+        let (d, n) = unsafe_audit::check_file(rel, &src, &toks, &test_ranges);
+        report.diags.extend(d);
+        report.unsafe_sites += n;
+
+        let (d, a, b) = locks::check_file(rel, &toks, &test_ranges, pol);
+        report.diags.extend(d);
+        report.lock_acquisitions += a;
+        report.blocking_calls += b;
+
+        parsed.push((rel.clone(), toks, test_ranges));
+    }
+
+    if !pol.trace_enum_file.is_empty() {
+        let (d, n) = tracecheck::check(pol, &parsed);
+        report.diags.extend(d);
+        report.trace_variants = n;
+    }
+
+    report
+        .diags
+        .sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    report
+}
+
+/// Load and parse the policy table at `path`.
+pub fn load_policy(path: &Path) -> anyhow::Result<Policy> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read policy {}: {e}", path.display()))?;
+    policy::parse_policy(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+/// Self-test against the seeded fixtures in `dir` (which must contain
+/// `policy.toml` plus the fixture sources its scope names).  Checks the
+/// exact marker correspondence: every line tagged `//~ ERROR <pass>`
+/// [optional substring] produced a diagnostic of that pass, and no
+/// diagnostic landed on an untagged line.  Returns
+/// `(markers checked, failures)` — empty failures means the auditor
+/// catches everything it is supposed to catch.
+pub fn run_fixtures(dir: &Path) -> anyhow::Result<(usize, Vec<String>)> {
+    let pol = load_policy(&dir.join("policy.toml"))?;
+    let report = audit_root(dir, &pol);
+
+    // Collect `//~ ERROR <pass> [substring]` markers.
+    struct Marker {
+        file: String,
+        line: u32,
+        pass: String,
+        substr: String,
+        hit: bool,
+    }
+    let mut markers: Vec<Marker> = Vec::new();
+    for rel in &pol.scope {
+        let src = std::fs::read_to_string(dir.join(rel))?;
+        for (i, l) in src.lines().enumerate() {
+            if let Some(rest) = l.split("//~ ERROR ").nth(1) {
+                let mut parts = rest.trim().splitn(2, ' ');
+                let pass = parts.next().unwrap_or("").to_string();
+                let substr = parts.next().unwrap_or("").trim().to_string();
+                markers.push(Marker {
+                    file: rel.clone(),
+                    line: (i + 1) as u32,
+                    pass,
+                    substr,
+                    hit: false,
+                });
+            }
+        }
+    }
+
+    let mut failures = Vec::new();
+    for d in &report.diags {
+        let matched = markers.iter_mut().find(|m| {
+            !m.hit
+                && m.file == d.file
+                && m.line == d.line
+                && m.pass == d.pass
+                && (m.substr.is_empty() || d.msg.contains(&m.substr))
+        });
+        match matched {
+            Some(m) => m.hit = true,
+            None => failures.push(format!("unexpected diagnostic: {d}")),
+        }
+    }
+    for m in &markers {
+        if !m.hit {
+            failures.push(format!(
+                "{}:{}: expected [{}] diagnostic{} was not produced",
+                m.file,
+                m.line,
+                m.pass,
+                if m.substr.is_empty() {
+                    String::new()
+                } else {
+                    format!(" containing `{}`", m.substr)
+                }
+            ));
+        }
+    }
+    Ok((markers.len(), failures))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::lexer::TokenKind;
+    use std::path::PathBuf;
+
+    fn manifest(rel: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+    }
+
+    #[test]
+    fn lexer_strings_chars_lifetimes_comments() {
+        let src = "let s = \"x // not a comment\";\nlet c = 'y';\nlet l: &'static str = \"z\";\n/* a /* nested */ b */\n// tail\nfn foo() {}\n";
+        let toks = lexer::lex(src);
+        assert_eq!(
+            toks.iter()
+                .filter(|t| matches!(t.kind, TokenKind::LineComment(_)))
+                .count(),
+            1,
+            "the // inside a string must not become a comment"
+        );
+        assert_eq!(
+            toks.iter()
+                .filter(|t| matches!(t.kind, TokenKind::BlockComment(_)))
+                .count(),
+            1,
+            "nested block comment must lex as one token"
+        );
+        assert_eq!(
+            toks.iter()
+                .filter(|t| matches!(t.kind, TokenKind::Lifetime))
+                .count(),
+            1
+        );
+        assert_eq!(
+            toks.iter()
+                .filter(|t| matches!(t.kind, TokenKind::Literal))
+                .count(),
+            3,
+            "two strings and one char literal"
+        );
+        let foo = toks.iter().find(|t| t.kind.is_ident("foo")).unwrap();
+        assert_eq!(foo.line, 6);
+    }
+
+    #[test]
+    fn lexer_raw_strings() {
+        let toks = lexer::lex("let r = r#\"has \"quotes\" inside\"#; fn after() {}");
+        assert!(toks.iter().any(|t| t.kind.is_ident("after")));
+        assert_eq!(
+            toks.iter()
+                .filter(|t| matches!(t.kind, TokenKind::Literal))
+                .count(),
+            1
+        );
+    }
+
+    #[test]
+    fn test_mods_are_skipped() {
+        let toks =
+            lexer::lex("fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n");
+        let ranges = lexer::test_mod_ranges(&toks);
+        assert_eq!(ranges.len(), 1);
+        let b = toks.iter().position(|t| t.kind.is_ident("b")).unwrap();
+        let c = toks.iter().position(|t| t.kind.is_ident("c")).unwrap();
+        assert!(lexer::in_ranges(&ranges, b));
+        assert!(!lexer::in_ranges(&ranges, c));
+    }
+
+    #[test]
+    fn policy_parses_and_validates() {
+        let pol = policy::parse_policy(
+            "[scope]\na.rs\n\n[atomics \"a.rs\"]\nseq.load = Acquire, SeqCst\nfence = SeqCst\n\n\
+             [locks \"a.rs\"]\ninner = 10\n\n[blocking]\npark, wait\n\n[trace]\nenum_file = a.rs\nemit = rec\n",
+        )
+        .unwrap();
+        assert_eq!(pol.scope, ["a.rs"]);
+        assert_eq!(
+            pol.ordering_rule("a.rs", "seq", "load").unwrap().as_slice(),
+            ["Acquire", "SeqCst"]
+        );
+        assert_eq!(
+            pol.ordering_rule("a.rs", "fence", "fence").unwrap().as_slice(),
+            ["SeqCst"]
+        );
+        assert_eq!(pol.lock_rank("a.rs", "inner"), Some(10));
+        assert!(pol.is_blocking("wait"));
+        assert!(!pol.is_blocking("notify_all"));
+
+        // Error cases, each with its own cause.
+        assert!(policy::parse_policy("").is_err(), "no scope");
+        assert!(policy::parse_policy("stray\n").is_err(), "entry before section");
+        assert!(
+            policy::parse_policy("[scope]\na.rs\n[atomics \"b.rs\"]\nx.load = Acquire\n").is_err(),
+            "atomics file outside scope"
+        );
+        assert!(
+            policy::parse_policy("[scope]\na.rs\n[atomics \"a.rs\"]\nx.load = Weird\n").is_err(),
+            "unknown ordering name"
+        );
+        assert!(
+            policy::parse_policy("[scope]\na.rs\n[locks \"a.rs\"]\ninner = abc\n").is_err(),
+            "non-integer rank"
+        );
+    }
+
+    #[test]
+    fn condvar_wait_rebind_is_not_flagged() {
+        let pol = policy::parse_policy(
+            "[scope]\nf.rs\n[locks \"f.rs\"]\ninner = 10\n[blocking]\nwait, recv\n",
+        )
+        .unwrap();
+        let src = "fn f(&self) {\n    let mut g = self.inner.lock().unwrap();\n    \
+                   g = self.cv.wait(g).unwrap();\n    drop(g);\n    let _ = rx.recv();\n}\n";
+        let toks = lexer::lex(src);
+        let (diags, acq, blocked) = locks::check_file("f.rs", &toks, &[], &pol);
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(acq, 1);
+        assert_eq!(blocked, 2, "the wait and the recv");
+    }
+
+    #[test]
+    fn blocking_under_live_guard_is_flagged() {
+        let pol = policy::parse_policy(
+            "[scope]\nf.rs\n[locks \"f.rs\"]\ninner = 10\n[blocking]\nrecv\n",
+        )
+        .unwrap();
+        let src = "fn f(&self) {\n    let g = self.inner.lock().unwrap();\n    \
+                   let _ = rx.recv();\n}\n";
+        let toks = lexer::lex(src);
+        let (diags, _, _) = locks::check_file("f.rs", &toks, &[], &pol);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("blocking `recv`"), "{}", diags[0].msg);
+    }
+
+    #[test]
+    fn fixtures_every_seeded_violation_flagged() {
+        let (checked, failures) = run_fixtures(&manifest("src/audit/fixtures")).unwrap();
+        assert!(
+            failures.is_empty(),
+            "fixture mismatches:\n{}",
+            failures.join("\n")
+        );
+        assert_eq!(checked, 14, "seeded-violation marker count drifted");
+    }
+
+    #[test]
+    fn fixture_diagnostics_carry_pass_and_message() {
+        let dir = manifest("src/audit/fixtures");
+        let pol = load_policy(&dir.join("policy.toml")).unwrap();
+        let report = audit_root(&dir, &pol);
+        let has = |file: &str, pass: &str, needle: &str| {
+            report
+                .diags
+                .iter()
+                .any(|d| d.file == file && d.pass == pass && d.msg.contains(needle))
+        };
+        assert!(has("bad_ordering.rs", "ordering", "allowed: Acquire"));
+        assert!(has("bad_ordering.rs", "ordering", "allowed: Release"));
+        assert!(has("bad_ordering.rs", "ordering", "Relaxed on undeclared site"));
+        assert!(has("bad_ordering.rs", "ordering", "not declared in the policy table"));
+        assert!(has("missing_safety.rs", "unsafe", "// SAFETY: comment"));
+        assert!(has("missing_safety.rs", "unsafe", "backticks"));
+        assert!(has("bad_lock_order.rs", "locks", "strictly increasing in rank"));
+        assert!(has("bad_lock_order.rs", "locks", "blocking `recv`"));
+        assert!(has("orphan_trace.rs", "trace", "no emission site"));
+        assert!(has("orphan_trace.rs", "trace", "not listed in TraceKind::ALL"));
+        assert!(has("orphan_trace.rs", "trace", "no handler arm in analyze()"));
+        assert!(has("orphan_trace.rs", "trace", "unknown TraceKind::Ghost"));
+    }
+
+    /// The shipping tree must satisfy every contract in the checked-in
+    /// policy table — this is the same check the `raptor-audit` binary
+    /// and the CI gate run.
+    #[test]
+    fn live_tree_audits_clean() {
+        let pol = load_policy(&manifest("audit_policy.toml")).unwrap();
+        let report = audit_root(&manifest("src"), &pol);
+        assert!(
+            report.clean(),
+            "live-tree contract violations:\n{}",
+            report
+                .diags
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        // Coverage must be non-vacuous: if a pass silently stopped
+        // seeing sites, "clean" would be meaningless.
+        assert_eq!(report.files, 5);
+        assert_eq!(report.unsafe_sites, 9, "5 in ring.rs + 4 in worker.rs");
+        assert_eq!(report.trace_variants, 15);
+        assert!(
+            report.atomic_sites >= 50,
+            "suspiciously few atomic sites: {}",
+            report.atomic_sites
+        );
+        assert!(
+            report.lock_acquisitions >= 10,
+            "suspiciously few lock acquisitions: {}",
+            report.lock_acquisitions
+        );
+        assert!(
+            report.blocking_calls >= 8,
+            "suspiciously few blocking calls: {}",
+            report.blocking_calls
+        );
+    }
+}

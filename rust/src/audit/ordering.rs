@@ -1,0 +1,160 @@
+//! Pass 1 — atomic-ordering policy.
+//!
+//! Every `Ordering::X` argument in a scoped file must resolve to an
+//! atomic call site `(receiver, operation)` declared in the policy
+//! table with `X` in its allowed set.  Undeclared call sites are errors
+//! in both directions: a `Relaxed` on an undeclared field is the
+//! classic silent-downgrade bug, and a stricter ordering on an
+//! undeclared field means the table no longer describes the code.
+//!
+//! The receiver is the identifier as written at the call site — a
+//! struct field (`seq.load`), a local binding over an atomic (`g.store`
+//! in the depth gauge), or, for free functions like `fence`, the
+//! function name itself.
+
+use super::lexer::{in_ranges, matching_open, prev_code, Token, TokenKind};
+use super::policy::Policy;
+use super::Diagnostic;
+
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Check one file; returns (diagnostics, call sites inspected).
+pub fn check_file(
+    file: &str,
+    toks: &[Token],
+    test_ranges: &[(usize, usize)],
+    pol: &Policy,
+) -> (Vec<Diagnostic>, usize) {
+    let mut diags = Vec::new();
+    let mut sites = 0usize;
+
+    for k in 0..toks.len() {
+        if !toks[k].kind.is_ident("Ordering") || in_ranges(test_ranges, k) {
+            continue;
+        }
+        // Match `Ordering :: <ord>`; anything else (use-imports, type
+        // positions) is not a call-site argument.
+        let Some(c1) = next_code_at(toks, k) else {
+            continue;
+        };
+        let Some(c2) = next_code_at(toks, c1) else {
+            continue;
+        };
+        if !(toks[c1].kind.is_punct(':') && toks[c2].kind.is_punct(':')) {
+            continue;
+        }
+        let Some(oi) = next_code_at(toks, c2) else {
+            continue;
+        };
+        let Some(ord) = toks[oi].kind.ident().filter(|o| ORDERINGS.contains(o)) else {
+            continue;
+        };
+        let line = toks[k].line;
+        sites += 1;
+
+        let Some((recv, op)) = enclosing_call(toks, k) else {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                pass: "ordering",
+                msg: format!("Ordering::{ord} outside a recognizable atomic call site"),
+            });
+            continue;
+        };
+
+        match pol.ordering_rule(file, &recv, &op) {
+            Some(rule) if rule.iter().any(|r| r == ord) => {}
+            Some(rule) => diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                pass: "ordering",
+                msg: format!(
+                    "{}(Ordering::{ord}) violates the policy table (allowed: {})",
+                    site_name(&recv, &op),
+                    rule.join(", ")
+                ),
+            }),
+            None if ord == "Relaxed" => diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                pass: "ordering",
+                msg: format!(
+                    "Ordering::Relaxed on undeclared site {} — declare it in the policy \
+                     table with its contract before relaxing",
+                    site_name(&recv, &op)
+                ),
+            }),
+            None => diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                pass: "ordering",
+                msg: format!(
+                    "atomic site {} is not declared in the policy table (used Ordering::{ord})",
+                    site_name(&recv, &op)
+                ),
+            }),
+        }
+    }
+    (diags, sites)
+}
+
+fn site_name(recv: &str, op: &str) -> String {
+    if recv == op {
+        format!("`{op}`")
+    } else {
+        format!("`{recv}.{op}`")
+    }
+}
+
+/// `next_code` starting the scan at index `k` (exclusive).
+fn next_code_at(toks: &[Token], k: usize) -> Option<usize> {
+    super::lexer::next_code(toks, k)
+}
+
+/// Resolve the call enclosing token `k`: walk back to the unbalanced
+/// `(`, take the identifier before it as the operation, and the
+/// identifier before the `.` (if any) as the receiver.  Free functions
+/// return the function name as both halves.
+fn enclosing_call(toks: &[Token], k: usize) -> Option<(String, String)> {
+    let mut depth = 0i32;
+    let mut p = k;
+    let opener = loop {
+        p = p.checked_sub(1)?;
+        match toks[p].kind {
+            TokenKind::Punct(')') => depth += 1,
+            TokenKind::Punct('(') => {
+                depth -= 1;
+                if depth < 0 {
+                    break p;
+                }
+            }
+            _ => (),
+        }
+    };
+    let mi = prev_code(toks, opener)?;
+    let op = toks[mi].kind.ident()?.to_string();
+    let recv = match prev_code(toks, mi) {
+        Some(d) if toks[d].kind.is_punct('.') => {
+            let r = prev_code(toks, d)?;
+            match &toks[r].kind {
+                TokenKind::Ident(s) => s.clone(),
+                // Indexed receiver `ticks[w].load(..)`: name the array.
+                TokenKind::Punct(']') => {
+                    let open = matching_open(toks, r, '[', ']')?;
+                    let b = prev_code(toks, open)?;
+                    toks[b].kind.ident()?.to_string()
+                }
+                // Call-chain receiver `get(w).unwrap().load(..)`: name
+                // the last method — the policy names what is written.
+                TokenKind::Punct(')') => {
+                    let open = matching_open(toks, r, '(', ')')?;
+                    let b = prev_code(toks, open)?;
+                    toks[b].kind.ident()?.to_string()
+                }
+                _ => return None,
+            }
+        }
+        _ => op.clone(),
+    };
+    Some((recv, op))
+}

@@ -1,0 +1,218 @@
+//! Parser for the concurrency-contract policy table
+//! (`rust/audit_policy.toml`).
+//!
+//! The table is plain text in a git-config-like dialect (the repo is
+//! offline; no TOML crate):
+//!
+//! ```text
+//! [scope]                       # files audited, relative to --root
+//! coordinator/ring.rs
+//!
+//! [atomics "coordinator/ring.rs"]
+//! seq.load  = Acquire           # field.operation = allowed orderings
+//! seq.store = Release
+//! enqueue_pos.load = Relaxed, SeqCst
+//! fence = SeqCst                # bare name: free function
+//!
+//! [locks "coordinator/ring.rs"]
+//! park = 20                     # guard receiver = rank
+//!
+//! [blocking]
+//! park, wait, pull_bulk, recv   # methods that may park the thread
+//!
+//! [trace]
+//! enum_file = metrics/trace.rs
+//! emit = rec, rec_at, push
+//! ```
+//!
+//! Lock ranks define the acquisition order: while a guard of rank R is
+//! live, only locks of rank > R may be taken (strictly increasing —
+//! equal rank means the same lock, i.e. self-deadlock).
+
+use std::collections::BTreeMap;
+
+/// Allowed `Ordering`s for one `(receiver, operation)` pair.
+pub type OrderingRule = Vec<String>;
+
+#[derive(Debug, Default, Clone)]
+pub struct Policy {
+    /// Audited files, relative to the audit root, in declaration order.
+    pub scope: Vec<String>,
+    /// file → (receiver ident, operation) → allowed orderings.
+    /// Free functions (e.g. `fence`) use the function name as both key
+    /// halves.
+    pub atomics: BTreeMap<String, BTreeMap<(String, String), OrderingRule>>,
+    /// file → guard receiver ident → rank.
+    pub locks: BTreeMap<String, BTreeMap<String, u32>>,
+    /// Method/function names that may park the calling thread.
+    pub blocking: Vec<String>,
+    /// File (relative to root) holding the `TraceKind` enum, `ALL`
+    /// table and `analyze()`.
+    pub trace_enum_file: String,
+    /// Call names that emit trace events (scanned for `TraceKind::X`
+    /// arguments across the whole scope).
+    pub trace_emit_ops: Vec<String>,
+}
+
+impl Policy {
+    /// Lookup an atomics rule; free functions pass `recv == op`.
+    pub fn ordering_rule(&self, file: &str, recv: &str, op: &str) -> Option<&OrderingRule> {
+        self.atomics
+            .get(file)
+            .and_then(|m| m.get(&(recv.to_string(), op.to_string())))
+    }
+
+    pub fn lock_rank(&self, file: &str, recv: &str) -> Option<u32> {
+        self.locks.get(file).and_then(|m| m.get(recv)).copied()
+    }
+
+    pub fn is_blocking(&self, name: &str) -> bool {
+        self.blocking.iter().any(|b| b == name)
+    }
+}
+
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Parse the policy text.  Errors carry the 1-indexed line number.
+pub fn parse_policy(text: &str) -> Result<Policy, String> {
+    enum Section {
+        None,
+        Scope,
+        Atomics(String),
+        Locks(String),
+        Blocking,
+        Trace,
+    }
+
+    let mut pol = Policy::default();
+    let mut sec = Section::None;
+
+    for (n, raw) in text.lines().enumerate() {
+        let n = n + 1;
+        let line = match raw.split_once('#') {
+            Some((code, _)) => code.trim(),
+            None => raw.trim(),
+        };
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            let inner = inner.trim();
+            sec = if inner == "scope" {
+                Section::Scope
+            } else if inner == "blocking" {
+                Section::Blocking
+            } else if inner == "trace" {
+                Section::Trace
+            } else if let Some(rest) = inner.strip_prefix("atomics") {
+                Section::Atomics(unquote(rest).ok_or_else(|| {
+                    format!("policy line {n}: [atomics \"<file>\"] needs a quoted file")
+                })?)
+            } else if let Some(rest) = inner.strip_prefix("locks") {
+                Section::Locks(unquote(rest).ok_or_else(|| {
+                    format!("policy line {n}: [locks \"<file>\"] needs a quoted file")
+                })?)
+            } else {
+                return Err(format!("policy line {n}: unknown section [{inner}]"));
+            };
+            continue;
+        }
+        match &sec {
+            Section::None => {
+                return Err(format!("policy line {n}: entry before any [section]"));
+            }
+            Section::Scope => pol.scope.push(line.to_string()),
+            Section::Blocking => {
+                pol.blocking
+                    .extend(line.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()));
+            }
+            Section::Trace => {
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| format!("policy line {n}: expected key = value"))?;
+                match k.trim() {
+                    "enum_file" => pol.trace_enum_file = v.trim().to_string(),
+                    "emit" => {
+                        pol.trace_emit_ops = v
+                            .split(',')
+                            .map(|s| s.trim().to_string())
+                            .filter(|s| !s.is_empty())
+                            .collect();
+                    }
+                    other => {
+                        return Err(format!("policy line {n}: unknown trace key `{other}`"));
+                    }
+                }
+            }
+            Section::Atomics(file) => {
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| format!("policy line {n}: expected field.op = orderings"))?;
+                let key = k.trim();
+                let (recv, op) = match key.split_once('.') {
+                    Some((r, o)) => (r.trim().to_string(), o.trim().to_string()),
+                    // Bare name: a free function such as `fence`.
+                    None => (key.to_string(), key.to_string()),
+                };
+                if recv.is_empty() || op.is_empty() {
+                    return Err(format!("policy line {n}: empty field or operation"));
+                }
+                let mut ords = Vec::new();
+                for o in v.split(',') {
+                    let o = o.trim();
+                    if !ORDERINGS.contains(&o) {
+                        return Err(format!(
+                            "policy line {n}: `{o}` is not an Ordering ({})",
+                            ORDERINGS.join("/")
+                        ));
+                    }
+                    ords.push(o.to_string());
+                }
+                if ords.is_empty() {
+                    return Err(format!("policy line {n}: no orderings listed"));
+                }
+                pol.atomics
+                    .entry(file.clone())
+                    .or_default()
+                    .insert((recv, op), ords);
+            }
+            Section::Locks(file) => {
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| format!("policy line {n}: expected guard = rank"))?;
+                let rank: u32 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("policy line {n}: rank must be an integer"))?;
+                pol.locks
+                    .entry(file.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), rank);
+            }
+        }
+    }
+
+    if pol.scope.is_empty() {
+        return Err("policy has no [scope] files".to_string());
+    }
+    for file in pol.atomics.keys().chain(pol.locks.keys()) {
+        if !pol.scope.contains(file) {
+            return Err(format!("policy references `{file}` outside [scope]"));
+        }
+    }
+    if !pol.trace_enum_file.is_empty() && !pol.scope.contains(&pol.trace_enum_file) {
+        return Err(format!(
+            "trace enum_file `{}` outside [scope]",
+            pol.trace_enum_file
+        ));
+    }
+    Ok(pol)
+}
+
+/// `"quoted string"` (surrounding whitespace tolerated) → contents.
+fn unquote(s: &str) -> Option<String> {
+    let s = s.trim();
+    s.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(|s| s.to_string())
+}

@@ -1,0 +1,223 @@
+//! Pass 4 — trace completeness.
+//!
+//! Every `TraceKind` variant must (1) have at least one emission site
+//! (`rec`/`rec_at`/`push` call with `TraceKind::X` in its arguments)
+//! somewhere in the audited scope, (2) appear in the `ALL` table, and
+//! (3) appear explicitly inside `fn analyze` — the stage re-derivation
+//! must name every variant (a `_ =>` catch-all hides new lifecycle
+//! events from the conservation recount, which is exactly the silent
+//! skew this pass exists to prevent).  Emissions of variants that do
+//! not exist in the enum are flagged where they occur.
+
+use super::lexer::{in_ranges, matching_close, next_code, prev_code, Token, TokenKind};
+use super::policy::Policy;
+use super::Diagnostic;
+
+/// Variants declared by `enum TraceKind`, with declaration lines.
+fn enum_variants(toks: &[Token]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for k in 0..toks.len() {
+        if !toks[k].kind.is_ident("enum") {
+            continue;
+        }
+        let Some(n) = next_code(toks, k) else { continue };
+        if !toks[n].kind.is_ident("TraceKind") {
+            continue;
+        }
+        let Some(open) = next_code(toks, n) else { continue };
+        if !toks[open].kind.is_punct('{') {
+            continue;
+        }
+        let Some(close) = matching_close(toks, open, '{', '}') else {
+            continue;
+        };
+        // Variants: `Name = 0,` or `Name,` at brace depth 1.
+        let mut i = open + 1;
+        while i < close {
+            if let TokenKind::Ident(v) = &toks[i].kind {
+                if v.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                    out.push((v.clone(), toks[i].line));
+                    // Skip to the separating comma (covers `= 12`).
+                    while i < close && !toks[i].kind.is_punct(',') {
+                        i += 1;
+                    }
+                }
+            }
+            i += 1;
+        }
+        break;
+    }
+    out
+}
+
+/// `TraceKind :: X` mentions within `toks[range]`.
+fn kind_mentions(toks: &[Token], from: usize, to: usize) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut k = from;
+    while k < to {
+        if toks[k].kind.is_ident("TraceKind") {
+            if let Some(c1) = next_code(toks, k) {
+                if toks[c1].kind.is_punct(':') {
+                    if let Some(c2) = next_code(toks, c1) {
+                        if toks[c2].kind.is_punct(':') {
+                            if let Some(v) = next_code(toks, c2) {
+                                if let TokenKind::Ident(name) = &toks[v].kind {
+                                    out.push((name.clone(), toks[v].line));
+                                    k = v;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+/// Body token range of `fn <name>`, or `None` if absent.
+fn fn_body(toks: &[Token], name: &str) -> Option<(usize, usize)> {
+    for k in 0..toks.len() {
+        if toks[k].kind.is_ident("fn")
+            && next_code(toks, k).map(|n| toks[n].kind.is_ident(name)) == Some(true)
+        {
+            let mut b = k;
+            while !toks[b].kind.is_punct('{') {
+                b = next_code(toks, b)?;
+            }
+            let close = matching_close(toks, b, '{', '}')?;
+            return Some((b, close));
+        }
+    }
+    None
+}
+
+/// Value token range of `ALL` (the `= [ ... ]` array), or `None`.
+fn all_table(toks: &[Token]) -> Option<(usize, usize)> {
+    for k in 0..toks.len() {
+        if toks[k].kind.is_ident("ALL") {
+            // const ALL: [TraceKind; COUNT] = [ ... ];  — the `;` inside
+            // the type's brackets must not end the scan early.
+            let mut e = k;
+            let mut bdepth = 0i32;
+            loop {
+                e = next_code(toks, e)?;
+                match toks[e].kind {
+                    TokenKind::Punct('[') => bdepth += 1,
+                    TokenKind::Punct(']') => bdepth -= 1,
+                    TokenKind::Punct('=') if bdepth == 0 => break,
+                    TokenKind::Punct(';') if bdepth == 0 => return None,
+                    _ => (),
+                }
+            }
+            let open = next_code(toks, e)?;
+            if !toks[open].kind.is_punct('[') {
+                return None;
+            }
+            let close = matching_close(toks, open, '[', ']')?;
+            return Some((open, close));
+        }
+    }
+    None
+}
+
+/// Run the pass over the whole scope.  `files` pairs each scoped
+/// relative path with its token stream and test ranges.  Returns
+/// (diagnostics, variant count).
+pub fn check(
+    pol: &Policy,
+    files: &[(String, Vec<Token>, Vec<(usize, usize)>)],
+) -> (Vec<Diagnostic>, usize) {
+    let mut diags = Vec::new();
+    let Some((_, enum_toks, _)) = files.iter().find(|(f, _, _)| *f == pol.trace_enum_file)
+    else {
+        diags.push(Diagnostic {
+            file: pol.trace_enum_file.clone(),
+            line: 0,
+            pass: "trace",
+            msg: "trace enum_file is not among the audited files".to_string(),
+        });
+        return (diags, 0);
+    };
+
+    let variants = enum_variants(enum_toks);
+    if variants.is_empty() {
+        diags.push(Diagnostic {
+            file: pol.trace_enum_file.clone(),
+            line: 0,
+            pass: "trace",
+            msg: "no `enum TraceKind` found in enum_file".to_string(),
+        });
+        return (diags, 0);
+    }
+    let known: Vec<&str> = variants.iter().map(|(v, _)| v.as_str()).collect();
+
+    // Emission sites across the scope.
+    let mut emitted: Vec<String> = Vec::new();
+    for (file, toks, test_ranges) in files {
+        for k in 0..toks.len() {
+            let TokenKind::Ident(name) = &toks[k].kind else {
+                continue;
+            };
+            if !pol.trace_emit_ops.iter().any(|op| op == name)
+                || in_ranges(test_ranges, k)
+                || prev_code(toks, k).map(|p| toks[p].kind.is_ident("fn")) == Some(true)
+            {
+                continue;
+            }
+            let Some(open) = next_code(toks, k) else { continue };
+            if !toks[open].kind.is_punct('(') {
+                continue;
+            }
+            let Some(close) = matching_close(toks, open, '(', ')') else {
+                continue;
+            };
+            for (v, line) in kind_mentions(toks, open, close) {
+                if known.contains(&v.as_str()) {
+                    emitted.push(v);
+                } else {
+                    diags.push(Diagnostic {
+                        file: file.clone(),
+                        line,
+                        pass: "trace",
+                        msg: format!("emission of unknown TraceKind::{v}"),
+                    });
+                }
+            }
+        }
+    }
+
+    // ALL table and analyze() handler mentions.
+    let in_all: Vec<String> = all_table(enum_toks)
+        .map(|(a, b)| kind_mentions(enum_toks, a, b).into_iter().map(|(v, _)| v).collect())
+        .unwrap_or_default();
+    let in_analyze: Vec<String> = fn_body(enum_toks, "analyze")
+        .map(|(a, b)| kind_mentions(enum_toks, a, b).into_iter().map(|(v, _)| v).collect())
+        .unwrap_or_default();
+
+    for (v, line) in &variants {
+        let mut missing = Vec::new();
+        if !emitted.iter().any(|e| e == v) {
+            missing.push(format!(
+                "no emission site ({} call) in scope",
+                pol.trace_emit_ops.join("/")
+            ));
+        }
+        if !in_all.iter().any(|e| e == v) {
+            missing.push("not listed in TraceKind::ALL".to_string());
+        }
+        if !in_analyze.iter().any(|e| e == v) {
+            missing.push("no handler arm in analyze()".to_string());
+        }
+        if !missing.is_empty() {
+            diags.push(Diagnostic {
+                file: pol.trace_enum_file.clone(),
+                line: *line,
+                pass: "trace",
+                msg: format!("TraceKind::{v}: {}", missing.join("; ")),
+            });
+        }
+    }
+    (diags, variants.len())
+}

@@ -1,0 +1,90 @@
+//! Pass 2 — unsafe audit.
+//!
+//! Every `unsafe` block, `unsafe fn`, and `unsafe impl` in a scoped
+//! file must be immediately preceded by a `// SAFETY:` comment: the
+//! contiguous run of comment-only lines directly above the line where
+//! the `unsafe` keyword appears must mention `SAFETY:`.
+//!
+//! `unsafe impl Send/Sync` carries the extra obligation of naming the
+//! field-level invariant it relies on — machine-checked as "the SAFETY
+//! comment must name at least one identifier in backticks" (e.g. the
+//! `seq` protocol, the `next` cursor), so the comment cannot degrade
+//! into a hand-wave.
+
+use super::lexer::{in_ranges, next_code, Token, TokenKind};
+use super::Diagnostic;
+
+/// Check one file; returns (diagnostics, unsafe sites inspected).
+pub fn check_file(
+    file: &str,
+    src: &str,
+    toks: &[Token],
+    test_ranges: &[(usize, usize)],
+) -> (Vec<Diagnostic>, usize) {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut diags = Vec::new();
+    let mut sites = 0usize;
+
+    for k in 0..toks.len() {
+        if !toks[k].kind.is_ident("unsafe") || in_ranges(test_ranges, k) {
+            continue;
+        }
+        sites += 1;
+        let line = toks[k].line;
+        let kind = match next_code(toks, k).map(|n| &toks[n].kind) {
+            Some(TokenKind::Ident(i)) if i == "impl" => "impl",
+            Some(TokenKind::Ident(i)) if i == "fn" => "fn",
+            Some(TokenKind::Ident(i)) if i == "trait" => "trait",
+            _ => "block",
+        };
+
+        // Collect the contiguous comment-only lines directly above.
+        let mut safety = String::new();
+        let mut l = line as usize - 1; // 0-indexed line above the unsafe
+        while l >= 1 {
+            let text = lines.get(l - 1).map(|s| s.trim()).unwrap_or("");
+            if !text.starts_with("//") {
+                break;
+            }
+            safety.push_str(text);
+            safety.push('\n');
+            l -= 1;
+        }
+
+        if !safety.contains("SAFETY:") {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                pass: "unsafe",
+                msg: format!(
+                    "`unsafe` {kind} is not immediately preceded by a // SAFETY: comment"
+                ),
+            });
+        } else if kind == "impl" && !names_invariant(&safety) {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                pass: "unsafe",
+                msg: "SAFETY comment on `unsafe impl` must name the field-level invariant \
+                      it relies on (put the field name in `backticks`)"
+                    .to_string(),
+            });
+        }
+    }
+    (diags, sites)
+}
+
+/// True when the comment contains at least one non-empty `ident` in
+/// backticks — the lexical proxy for "names the invariant's field".
+fn names_invariant(comment: &str) -> bool {
+    let mut rest = comment;
+    while let Some(a) = rest.find('`') {
+        let tail = &rest[a + 1..];
+        match tail.find('`') {
+            Some(b) if b > 0 => return true,
+            Some(b) => rest = &tail[b + 1..],
+            None => return false,
+        }
+    }
+    false
+}

@@ -1,0 +1,74 @@
+//! `raptor-audit` — machine-check the concurrency contracts.
+//!
+//! ```text
+//! cargo run --release --bin raptor-audit -- --root rust/src
+//! cargo run --release --bin raptor-audit -- --root rust/src --fixtures
+//! ```
+//!
+//! Exits nonzero with `file:line: [pass] message` diagnostics when any
+//! contract in `rust/audit_policy.toml` is violated.  `--fixtures`
+//! self-tests the analyzer against the seeded violations under
+//! `src/audit/fixtures/` instead (every marker must be flagged, nothing
+//! else may be).  `--policy <path>` overrides the table location
+//! (default: `<root>/../audit_policy.toml`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use raptor::audit;
+use raptor::util::cli::Args;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("raptor-audit: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> anyhow::Result<ExitCode> {
+    let args = Args::from_env(&["root", "policy"])?;
+    let root = PathBuf::from(args.get("root").unwrap_or("rust/src"));
+    if !root.is_dir() {
+        anyhow::bail!("--root {} is not a directory", root.display());
+    }
+
+    if args.flag("fixtures") {
+        let dir = root.join("audit/fixtures");
+        let (checked, failures) = audit::run_fixtures(&dir)?;
+        if failures.is_empty() {
+            println!("raptor-audit --fixtures: all {checked} seeded violations flagged");
+            return Ok(ExitCode::SUCCESS);
+        }
+        for f in &failures {
+            eprintln!("{f}");
+        }
+        eprintln!(
+            "raptor-audit --fixtures: {} mismatch(es) across {checked} markers",
+            failures.len()
+        );
+        return Ok(ExitCode::FAILURE);
+    }
+
+    let policy_path = match args.get("policy") {
+        Some(p) => PathBuf::from(p),
+        None => root
+            .parent()
+            .map(|p| p.join("audit_policy.toml"))
+            .unwrap_or_else(|| PathBuf::from("audit_policy.toml")),
+    };
+    let pol = audit::load_policy(&policy_path)?;
+    let report = audit::audit_root(&root, &pol);
+
+    for d in &report.diags {
+        eprintln!("{d}");
+    }
+    println!("raptor-audit: {}", report.summary());
+    if report.clean() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::FAILURE)
+    }
+}

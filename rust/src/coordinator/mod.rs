@@ -102,7 +102,16 @@
 //!
 //! ## Memory-ordering contract
 //!
-//! The rules the lock-free structures rely on (details at each type):
+//! The contract is **machine-checked**: every atomic call site in this
+//! module (and `metrics::trace`) is enumerated in `rust/audit_policy.toml`
+//! with its allowed `Ordering`s, and the `raptor-audit` binary
+//! (`crate::audit`, run by CI and by the `live_tree_audits_clean` test)
+//! fails the build when a site drifts from the table — or when a new
+//! site appears without being declared.  The same table ranks the locks
+//! (buffer `inner` < ring `park` < registry `m` < trace `events`) and
+//! the audit flags any acquisition out of rank order or blocking call
+//! under a live guard.  The prose below is the *why* behind the table's
+//! entries (details at each type):
 //!
 //! * **Payload hand-off is Acquire/Release on exactly one atomic.**  The
 //!   ring publishes a bulk with a Release store to the slot's sequence

@@ -93,9 +93,17 @@ pub struct RingQueue<T> {
     full_waiters: AtomicUsize,
 }
 
-// The UnsafeCell payload is only touched by the thread that claimed the
-// slot via the seq protocol; Vec<T> moves between threads.
+// SAFETY: sending the queue sends the buffered `value` payloads with
+// it, which is sound exactly when `T: Send`; every other field is
+// already Send (`seq` and the cursors are atomics, the parker is a
+// Mutex/Condvar pair).
 unsafe impl<T: Send> Send for RingQueue<T> {}
+// SAFETY: shared access is mediated by the `seq` protocol — a slot's
+// `value` cell is written only by the producer that won the
+// `enqueue_pos` CAS and read only by the consumer that won the
+// `dequeue_pos` CAS, with the Release store / Acquire load on `seq`
+// ordering the handoff, so `&RingQueue` never yields aliased access to
+// a payload.
 unsafe impl<T: Send> Sync for RingQueue<T> {}
 
 /// Outcome of one lock-free push attempt (no parking, no notification).
@@ -175,6 +183,10 @@ impl<T> RingQueue<T> {
                 ) {
                     Ok(_) => {
                         self.pushed.fetch_add(bulk.len() as u64, Ordering::Relaxed);
+                        // SAFETY: winning the CAS on `enqueue_pos` made
+                        // this thread the slot's unique writer for this
+                        // lap; consumers cannot touch `value` until the
+                        // Release store of `seq` below publishes it.
                         unsafe { (*slot.value.get()).write(bulk) };
                         slot.seq.store(pos + 1, Ordering::Release);
                         return PushAttempt::Done;
@@ -207,6 +219,11 @@ impl<T> RingQueue<T> {
                     Ordering::Relaxed,
                 ) {
                     Ok(_) => {
+                        // SAFETY: `seq == pos + 1` (Acquire) proved the
+                        // producer's Release store published `value`,
+                        // and winning the CAS on `dequeue_pos` made this
+                        // thread its unique reader; the slot is not
+                        // reused until the `seq` store below.
                         let bulk = unsafe { (*slot.value.get()).assume_init_read() };
                         slot.seq.store(pos + self.cap, Ordering::Release);
                         self.pulled.fetch_add(bulk.len() as u64, Ordering::Relaxed);
@@ -410,6 +427,9 @@ impl<T> Drop for RingQueue<T> {
         while pos < enq {
             let slot = &mut self.slots[(pos % self.cap) as usize];
             if *slot.seq.get_mut() == pos + 1 {
+                // SAFETY: `&mut self` gives exclusive access, and
+                // `seq == pos + 1` means this slot holds a published
+                // bulk no consumer claimed — initialized and unaliased.
                 unsafe { slot.value.get_mut().assume_init_drop() };
             }
             pos += 1;

@@ -86,9 +86,14 @@ struct Segment<T> {
     next: AtomicUsize,
 }
 
-// Claims move T across threads; the UnsafeCell is only read at the
-// uniquely claimed index.
+// SAFETY: sending a segment sends its unclaimed `slots` payloads, which
+// is sound exactly when `T: Send`; the `next` cursor is an atomic.
 unsafe impl<T: Send> Send for Segment<T> {}
+// SAFETY: shared access is mediated by the `next` claim cursor — each
+// `slots` index is handed out at most once by `fetch_add`, so the cell
+// at a claimed index is read exclusively by the claiming thread, and
+// the contents were published before the segment itself was shared
+// (under the buffer mutex).
 unsafe impl<T: Send> Sync for Segment<T> {}
 
 impl<T> Segment<T> {
@@ -112,6 +117,9 @@ impl<T> Segment<T> {
         }
         let i = self.next.fetch_add(1, Ordering::Relaxed);
         if i < self.slots.len() {
+            // SAFETY: `fetch_add` on `next` hands out index `i` to this
+            // thread alone, and every in-bounds slot was initialized in
+            // `new`; the value is moved out exactly once.
             Some(unsafe { (*self.slots[i].get()).assume_init_read() })
         } else {
             None
@@ -126,6 +134,9 @@ impl<T> Drop for Segment<T> {
         let len = self.slots.len();
         let start = (*self.next.get_mut()).min(len);
         for slot in &mut self.slots[start..len] {
+            // SAFETY: `&mut self` gives exclusive access; indices from
+            // the `next` cursor up were never claimed, so these slots
+            // are still initialized and owned by the segment.
             unsafe { slot.get_mut().assume_init_drop() };
         }
     }

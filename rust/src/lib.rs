@@ -17,6 +17,14 @@
 //!
 //! Python never runs on the request path: workers execute the AOT
 //! artifacts via PJRT (`runtime`).
+
+// Every unsafe operation needs its own `unsafe {}` block — and
+// therefore its own `// SAFETY:` comment, which `raptor-audit`
+// (src/bin/audit.rs) machine-checks together with the atomic-ordering,
+// lock-hierarchy and trace-completeness contracts.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod audit;
 pub mod baseline;
 pub mod campaign;
 pub mod coordinator;

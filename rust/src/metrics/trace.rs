@@ -544,7 +544,19 @@ pub fn analyze(events: &[TraceEvent], shard_capacity: &[f64]) -> TraceAnalysis {
             TraceKind::Steal => {
                 *steals.entry(e.shard).or_insert(0) += 1;
             }
-            _ => {}
+            // Counted in `counts` above; no per-task stage to derive.
+            // Listed explicitly (no `_` arm) so adding a TraceKind
+            // variant fails to compile until analyze() decides how to
+            // treat it — raptor-audit's trace-completeness pass checks
+            // the same property lexically.
+            TraceKind::Submitted
+            | TraceKind::Refill
+            | TraceKind::RetryFlushStall
+            | TraceKind::QueueDepth
+            | TraceKind::Released
+            | TraceKind::CascadeCanceled
+            | TraceKind::Heartbeat
+            | TraceKind::Reassigned => {}
         }
     }
 
